@@ -1,0 +1,49 @@
+"""ILS search benchmark: sequential (paper) vs batched JAX/Pallas (ours).
+
+Measures evaluations/second and best fitness at equal wall-clock — the
+DESIGN.md §2.1 claim that the population search dominates the sequential
+chain on parallel hardware.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.dspot import compute_dspot
+from repro.core.evaluator import CachedEvaluator
+from repro.core.ils import ILSParams, run_ils
+from repro.core.ils_jax import BatchedILSParams, run_batched_ils
+from repro.core.types import CloudConfig
+from repro.sim.workloads import make_job
+
+
+def run(job_name: str = "J100", budget_s: float = 8.0) -> list[dict]:
+    cfg = CloudConfig()
+    job = make_job(job_name)
+    pool = cfg.instance_pool()
+    dspot = compute_dspot(job.deadline_s, job.tasks, cfg)
+
+    t0 = time.time()
+    seq = run_ils(job.tasks, pool, cfg, dspot, job.deadline_s,
+                  ILSParams(max_iteration=40, max_attempt=25, seed=0))
+    seq_t = time.time() - t0
+
+    t0 = time.time()
+    bat = run_batched_ils(job.tasks, pool, cfg, dspot, job.deadline_s,
+                          BatchedILSParams(population=32, iterations=40,
+                                           proposals=16, seed=0))
+    bat_t = time.time() - t0
+
+    ev = CachedEvaluator(job.tasks, cfg, job.deadline_s)
+    bat_exact = ev.fitness(bat.solution, dspot * 1.3)
+    return [{
+        "table": "ils_bench", "job": job_name,
+        "seq_time_s": round(seq_t, 2), "seq_evals": seq.evaluations,
+        "seq_evals_per_s": round(seq.evaluations / seq_t),
+        "seq_fitness": round(seq.fitness, 4),
+        "batched_time_s": round(bat_t, 2), "batched_evals": bat.evaluations,
+        "batched_evals_per_s": round(bat.evaluations / bat_t),
+        "batched_bound": round(bat.fitness_bound, 4),
+        "batched_exact_fitness": round(float(bat_exact), 4),
+        "speedup_evals_per_s": round(
+            (bat.evaluations / bat_t) / (seq.evaluations / seq_t), 1),
+    }]

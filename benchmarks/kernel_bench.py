@@ -1,0 +1,79 @@
+"""Kernel microbenches (interpret-mode correctness + jnp-reference timing).
+
+The container is CPU-only: wall-times here are for the *reference* paths
+(the Pallas bodies run in interpret mode for validation, not speed); the
+TPU roofline for the kernels comes from the dry-run analysis.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.time() - t0) / reps * 1e6
+
+
+def run() -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # flash attention ref vs blocked-jnp path
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.models.layers import _blocked_attention
+    b, s, h, hd = 2, 1024, 4, 64
+    q = jnp.asarray(rng.normal(0, 1, (b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, h, hd)), jnp.float32)
+    dense = jax.jit(lambda q, k, v: attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(b * h, s, hd),
+        k.transpose(0, 2, 1, 3).reshape(b * h, s, hd),
+        v.transpose(0, 2, 1, 3).reshape(b * h, s, hd)))
+    blocked = jax.jit(lambda q, k, v: _blocked_attention(q, k, v, 0))
+    rows.append({"table": "kernels", "kernel": "attention",
+                 "shape": f"b{b} s{s} h{h} hd{hd}",
+                 "dense_us": round(_time(dense, q, k, v)),
+                 "blocked_us": round(_time(blocked, q, k, v))})
+
+    # rwkv6 scan vs chunked ref math
+    from repro.models.rwkv6 import wkv_scan
+    t = 256
+    r = jnp.asarray(rng.normal(0, 1, (b, t, h, hd)), jnp.float32)
+    kk = jnp.asarray(rng.normal(0, 1, (b, t, h, hd)), jnp.float32)
+    vv = jnp.asarray(rng.normal(0, 1, (b, t, h, hd)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.9, 0.999, (b, t, h, hd)), jnp.float32)
+    u = jnp.asarray(rng.normal(0, 0.3, (h, hd)), jnp.float32)
+    st = jnp.zeros((b, h, hd, hd), jnp.float32)
+    seq_fn = jax.jit(lambda *a: wkv_scan(*a))
+    rows.append({"table": "kernels", "kernel": "rwkv6_wkv",
+                 "shape": f"b{b} t{t} h{h} hd{hd}",
+                 "scan_us": round(_time(seq_fn, r, kk, vv, w, u, st))})
+
+    # sched_fitness ref throughput (the ILS inner loop)
+    from repro.kernels.sched_fitness.ref import population_fitness_ref
+    p_, b_, v_ = 256, 100, 35
+    alloc = jnp.asarray(rng.integers(0, v_, (p_, b_)), jnp.int32)
+    e = jnp.asarray(rng.uniform(50, 400, (b_, v_)), jnp.float32)
+    rm = jnp.asarray(rng.uniform(2, 14, b_), jnp.float32)
+    cores = jnp.asarray(rng.choice([2.0, 4.0], v_))
+    mem = jnp.full((v_,), 3840.0)
+    price = jnp.asarray(rng.uniform(1e-5, 6e-5, v_), jnp.float32)
+    spot = jnp.asarray(rng.integers(0, 2, v_), jnp.float32)
+    fit = jax.jit(lambda a: population_fitness_ref(
+        a, e, rm, cores, mem, price, spot, dspot=2240.0, deadline=2700.0,
+        alpha=0.5, cost_scale=0.2, boot_s=60.0))
+    us = _time(fit, alloc)
+    rows.append({"table": "kernels", "kernel": "sched_fitness",
+                 "shape": f"P{p_} B{b_} V{v_}",
+                 "us_per_call": round(us),
+                 "evals_per_s": round(p_ / (us / 1e6))})
+    return rows

@@ -1,0 +1,143 @@
+"""Paper-table reproductions (Tables II-VI) on the discrete-event cloud.
+
+Each function mirrors one table; `run_all` prints them and returns rows for
+CSV emission by benchmarks.run.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.dynamic import BURST_HADS, HADS, ILS_ONDEMAND
+from repro.core.ils import ILSParams
+from repro.core.types import CloudConfig, Market
+from repro.sim.events import SCENARIOS, SC_NONE
+from repro.sim.simulator import simulate
+from repro.sim.workloads import ALL_JOBS, make_job
+
+CFG = CloudConfig()
+PARAMS = ILSParams(max_iteration=60, max_attempt=25, seed=7)
+REPEATS = 3
+
+
+def table2_catalog() -> list[dict]:
+    """Table II: VM attributes + the WRR weights of Eq. 7."""
+    rows = []
+    for vt in CFG.spot_types:
+        rows.append({"table": "II", "type": vt.name, "vcpus": vt.vcpus,
+                     "memory_gb": vt.memory_mb / 1024,
+                     "price_od": vt.price_ondemand,
+                     "price_spot": vt.price_spot,
+                     "wrr_weight": round(vt.weight(Market.SPOT), 1)})
+    for vt in CFG.burstable_types:
+        rows.append({"table": "II", "type": vt.name, "vcpus": vt.vcpus,
+                     "memory_gb": vt.memory_mb / 1024,
+                     "price_od": vt.price_ondemand, "price_spot": None,
+                     "baseline": vt.baseline_frac})
+    return rows
+
+
+def table3_jobs() -> list[dict]:
+    """Table III: job characteristics (memory footprint bands)."""
+    rows = []
+    for name in ALL_JOBS:
+        job = make_job(name)
+        lo, avg, hi = job.memory_stats_mb()
+        rows.append({"table": "III", "job": name, "n_tasks": job.n_tasks,
+                     "mem_min_mb": round(lo, 2), "mem_avg_mb": round(avg, 2),
+                     "mem_max_mb": round(hi, 2)})
+    return rows
+
+
+_PLAN_CACHE: dict = {}
+
+
+def _plan(job_name: str, policy):
+    """The primary map is scenario-independent — build once per (job,
+    policy) and reuse (the paper also plans once, then reacts)."""
+    from repro.core.dynamic import build_primary_map
+    key = (job_name, policy.name)
+    if key not in _PLAN_CACHE:
+        _PLAN_CACHE[key] = build_primary_map(make_job(job_name), CFG,
+                                             policy, PARAMS)
+    return _PLAN_CACHE[key]
+
+
+def _avg(job_name: str, policy, scenario, seeds=range(REPEATS)):
+    from repro.sim.simulator import Simulator
+    cs, ms, hib, res, dyn, ok = [], [], [], [], [], True
+    for seed in seeds:
+        sim = Simulator(make_job(job_name), _plan(job_name, policy), CFG,
+                        scenario=scenario, seed=seed)
+        r = sim.run()
+        cs.append(r.cost)
+        ms.append(r.makespan)
+        hib.append(r.n_hibernations)
+        res.append(r.n_resumes)
+        dyn.append(r.n_dynamic_ondemand)
+        ok &= r.deadline_met
+    return (float(np.mean(cs)), float(np.mean(ms)), float(np.mean(hib)),
+            float(np.mean(res)), float(np.mean(dyn)), ok)
+
+
+def table4_no_hibernation() -> list[dict]:
+    """Table IV: Burst-HADS vs HADS (no hibernation) vs ILS on-demand."""
+    rows = []
+    for job in ALL_JOBS:
+        bc, bm, *_ , bok = _avg(job, BURST_HADS, SC_NONE)
+        hc, hm, *_, hok = _avg(job, HADS, SC_NONE)
+        oc, om, *_, ook = _avg(job, ILS_ONDEMAND, SC_NONE)
+        rows.append({
+            "table": "IV", "job": job,
+            "bhads_cost": round(bc, 3), "bhads_makespan": round(bm),
+            "hads_cost": round(hc, 3), "hads_makespan": round(hm),
+            "od_cost": round(oc, 3), "od_makespan": round(om),
+            "cost_vs_od_pct": round(100 * (oc - bc) / oc, 1),
+            "mkp_vs_hads_pct": round(100 * (hm - bm) / hm, 1),
+            "deadline_met": bok and hok and ook})
+    return rows
+
+
+def table5_scenarios() -> list[dict]:
+    return [{"table": "V", "scenario": s.name, "k_h": s.k_h, "k_r": s.k_r,
+             "lambda_h": f"{s.k_h}/2700", "lambda_r": f"{s.k_r}/2700"}
+            for s in SCENARIOS.values() if s.name != "none"]
+
+
+def table6_scenarios(jobs=ALL_JOBS) -> list[dict]:
+    """Table VI: Burst-HADS vs HADS across sc1..sc5."""
+    rows = []
+    for job in jobs:
+        for sc in ("sc1", "sc2", "sc3", "sc4", "sc5"):
+            scen = SCENARIOS[sc]
+            bc, bm, bh, br, bd, bok = _avg(job, BURST_HADS, scen)
+            hc, hm, hh, hr, hd_, hok = _avg(job, HADS, scen)
+            rows.append({
+                "table": "VI", "job": job, "scenario": sc,
+                "hibernations": round(bh, 2), "resumes": round(br, 2),
+                "bhads_dyn_od": round(bd, 2), "hads_dyn_od": round(hd_, 2),
+                "bhads_cost": round(bc, 3), "bhads_makespan": round(bm),
+                "hads_cost": round(hc, 3), "hads_makespan": round(hm),
+                "diff_cost_pct": round(100 * (hc - bc) / hc, 1),
+                "diff_mkp_pct": round(100 * (hm - bm) / hm, 1),
+                "bhads_deadline_met": bok})
+    return rows
+
+
+def headline_claims(t4: list[dict], t6: list[dict]) -> list[dict]:
+    """The paper's §IV headline numbers, recomputed on our reproduction."""
+    cost_red = float(np.mean([r["cost_vs_od_pct"] for r in t4]))
+    mkp_red = float(np.mean([r["diff_mkp_pct"] for r in t6]))
+    cost_inc = float(np.mean([-r["diff_cost_pct"] for r in t6]))
+    met = all(r["bhads_deadline_met"] for r in t6)
+    return [{
+        "table": "claims",
+        "avg_cost_reduction_vs_ondemand_pct": round(cost_red, 1),
+        "paper_value": ">52% (Table IV) / 41.8% (§IV)",
+        "avg_makespan_reduction_vs_hads_pct": round(mkp_red, 1),
+        "paper_makespan_reduction": "25.87%",
+        "avg_cost_increase_vs_hads_pct": round(cost_inc, 1),
+        "paper_cost_increase": "1.92%",
+        "deadline_met_all_scenarios": met,
+    }]

@@ -1,0 +1,47 @@
+"""Beyond-paper ablation: hibernation-rate stress sweep.
+
+The paper evaluates k_h <= 5; here we push the hibernation rate to 12
+events per execution to find where Burst-HADS's deadline guarantee
+actually breaks, and ablate the burstable pool (burst_rate=0) to isolate
+its contribution — neither appears in the paper.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dynamic import BURST_HADS, build_primary_map
+from repro.core.ils import ILSParams
+from repro.core.types import CloudConfig
+from repro.sim.events import Scenario
+from repro.sim.simulator import Simulator
+from repro.sim.workloads import make_job
+
+
+def run(job_name: str = "J80", seeds=range(3)) -> list[dict]:
+    cfg = CloudConfig()
+    job = make_job(job_name)
+    rows = []
+    for burst_rate, tag in ((0.2, "with_burstables"), (0.0, "no_burstables")):
+        params = ILSParams(max_iteration=40, max_attempt=20, seed=1,
+                           burst_rate=burst_rate)
+        plan = build_primary_map(job, cfg, BURST_HADS, params)
+        for k_h in (1, 3, 5, 8, 12):
+            met, mkps, costs, migs = [], [], [], []
+            for seed in seeds:
+                sim = Simulator(job, plan, cfg,
+                                Scenario(f"k{k_h}", k_h, k_h / 2),
+                                seed=seed)
+                r = sim.run()
+                met.append(r.deadline_met)
+                mkps.append(r.makespan)
+                costs.append(r.cost)
+                migs.append(sum(v for k, v in r.counters.items()
+                                if k.startswith("migrations")))
+            rows.append({
+                "table": "stress", "job": job_name, "variant": tag,
+                "k_h": k_h,
+                "deadline_met": f"{sum(met)}/{len(met)}",
+                "avg_makespan": round(float(np.mean(mkps))),
+                "avg_cost": round(float(np.mean(costs)), 3),
+                "avg_migrations": round(float(np.mean(migs)), 1)})
+    return rows

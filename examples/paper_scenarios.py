@@ -1,0 +1,36 @@
+"""Reproduce the paper's §IV comparison on one job across all scenarios.
+
+  PYTHONPATH=src python examples/paper_scenarios.py [J60]
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.dynamic import BURST_HADS, HADS, ILS_ONDEMAND
+from repro.core.ils import ILSParams
+from repro.core.types import CloudConfig
+from repro.sim.events import SCENARIOS, SC_NONE
+from repro.sim.simulator import simulate
+from repro.sim.workloads import make_job
+
+
+def main() -> None:
+    job = make_job(sys.argv[1] if len(sys.argv) > 1 else "J60")
+    cfg = CloudConfig()
+    params = ILSParams(max_iteration=40, max_attempt=20, seed=9)
+
+    print(f"{'policy':14s}{'scenario':10s}{'cost':>9s}{'makespan':>10s}"
+          f"{'met':>5s}{'hib':>5s}")
+    for policy in (BURST_HADS, HADS, ILS_ONDEMAND):
+        scenarios = ["none"] if policy is ILS_ONDEMAND else \
+            ["none", "sc1", "sc2", "sc3", "sc4", "sc5"]
+        for sc in scenarios:
+            r = simulate(job, cfg, policy, SCENARIOS[sc], seed=3,
+                         params=params)
+            print(f"{r.policy:14s}{sc:10s}${r.cost:8.3f}"
+                  f"{r.makespan:9.0f}s{str(r.deadline_met):>5s}"
+                  f"{r.n_hibernations:5d}")
+
+
+if __name__ == "__main__":
+    main()

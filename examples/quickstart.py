@@ -1,0 +1,50 @@
+"""Quickstart: schedule a Bag-of-Tasks with Burst-HADS and print the plan.
+
+  PYTHONPATH=src python examples/quickstart.py [J60|J80|J100|ED200]
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (CloudConfig, ILSParams, burst_allocation,
+                        compute_dspot, evaluate, run_ils)
+from repro.core.dynamic import BURST_HADS
+from repro.sim.events import SCENARIOS
+from repro.sim.simulator import simulate
+from repro.sim.workloads import make_job
+
+
+def main() -> None:
+    job_name = sys.argv[1] if len(sys.argv) > 1 else "J60"
+    cfg = CloudConfig()
+    job = make_job(job_name)
+    dspot = compute_dspot(job.deadline_s, job.tasks, cfg)
+    print(f"job={job.name} tasks={job.n_tasks} deadline={job.deadline_s:.0f}s"
+          f" D_spot={dspot:.0f}s")
+
+    # Algorithm 1: ILS + burstable allocation
+    params = ILSParams(max_iteration=60, max_attempt=25, seed=0)
+    pool = cfg.instance_pool()
+    ils = run_ils(job.tasks, pool, cfg, dspot, job.deadline_s, params)
+    plan = burst_allocation(ils.solution, job.tasks, cfg, dspot,
+                            job.deadline_s, params.burst_rate)
+    res = evaluate(plan.solution, job.tasks, cfg, ils.rd_spot,
+                   job.deadline_s)
+    print(f"\nprimary map: est cost=${res.cost:.3f} "
+          f"est makespan={res.makespan:.0f}s "
+          f"({len(res.per_vm)} VMs, {len(plan.burstable_uids)} burstable)")
+    for uid, vs in sorted(res.per_vm.items()):
+        print(f"  {vs.vm.name:26s} tasks={len(vs.assignments):3d} "
+              f"busy until {vs.end_time:6.0f}s  ${vs.cost:.4f}")
+
+    # Execute under the average hibernation scenario (sc5)
+    print("\nsimulating under scenario sc5 (k_h=3, k_r=2.5)...")
+    r = simulate(job, cfg, BURST_HADS, SCENARIOS["sc5"], seed=1,
+                 params=params)
+    print(f"cost=${r.cost:.3f} makespan={r.makespan:.0f}s "
+          f"deadline_met={r.deadline_met} hibernations={r.n_hibernations} "
+          f"migrations/steals={r.counters}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Calibrate dry-run mechanics: 512 host devices, AOT compile, cost_analysis semantics.
+
+Run: python scripts/calibrate_dryrun.py
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+print("n_devices:", jax.device_count())
+
+mesh = jax.make_mesh((2, 16, 16), ("pod", "data", "model"))
+print("mesh:", mesh)
+
+M, K, N = 4096, 8192, 2048
+
+
+def step(x, w):
+    y = x @ w                      # (M,N) = (M,K)@(K,N)
+    return jnp.sum(y * y)
+
+
+xs = jax.ShapeDtypeStruct((M, K), jnp.bfloat16)
+ws = jax.ShapeDtypeStruct((K, N), jnp.bfloat16)
+
+in_shardings = (
+    NamedSharding(mesh, P(("pod", "data"), None)),   # x: rows over pod+data
+    NamedSharding(mesh, P(None, "model")),           # w: cols over model
+)
+
+with mesh:
+    lowered = jax.jit(step, in_shardings=in_shardings).lower(xs, ws)
+    compiled = lowered.compile()
+
+ca = compiled.cost_analysis()
+if isinstance(ca, list):
+    ca = ca[0]
+print("cost_analysis keys sample:", {k: v for k, v in list(ca.items())[:12]})
+flops = ca.get("flops", 0.0)
+expected_total = 2 * M * K * N + 3 * M * N  # matmul + elementwise square/sum
+print(f"reported flops      : {flops:.3e}")
+print(f"expected TOTAL flops: {expected_total:.3e}")
+print(f"expected PER-DEVICE : {expected_total/512:.3e}")
+print("bytes accessed:", ca.get("bytes accessed", None))
+
+ma = compiled.memory_analysis()
+print("memory_analysis:", ma)
+
+txt = compiled.as_text()
+import re
+colls = re.findall(r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)[^\n=]*", txt)
+print("num collective mentions:", len(colls))
+for line in txt.splitlines():
+    if any(c in line for c in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")) and "=" in line:
+        print("HLO:", line.strip()[:200])

@@ -1,0 +1,54 @@
+"""Fast per-layer probe compiles for §Perf iterations.
+
+Compiles ONLY the layer probe (seconds, not minutes) for a cell and prints
+flops / bytes / collective bytes per device, so hypothesis->change->measure
+cycles are cheap.  Usage:
+  PYTHONPATH=src python scripts/perf_probe.py llama4-scout-17b-a16e train_4k
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import sys
+import time
+
+import jax
+
+from repro.launch.hlo_analysis import parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import make_cell
+
+arch, shape = sys.argv[1], sys.argv[2]
+overrides = {}
+for kv in sys.argv[3:]:
+    k, v = kv.split("=", 1)
+    overrides[k] = v if not v.replace(".", "").isdigit() else (
+        int(v) if v.isdigit() else float(v))
+
+mesh = make_production_mesh(multi_pod=False)
+t0 = time.time()
+if overrides:
+    import dataclasses
+    import repro.launch.specs as specs
+    import repro.configs as cfgs
+    base_get = cfgs.get_config
+    specs.get_config = lambda a, tiny=False: dataclasses.replace(
+        base_get(a, tiny), **overrides)
+cell = make_cell(arch, shape, mesh)
+with mesh:
+    lowered = jax.jit(cell.probe_fn,
+                      in_shardings=cell.probe_in_shardings
+                      ).lower(*cell.probe_args)
+    compiled = lowered.compile()
+ca = compiled.cost_analysis()
+if isinstance(ca, list):
+    ca = ca[0]
+coll = parse_collectives(compiled.as_text())
+print(f"arch={arch} shape={shape} compile={time.time()-t0:.1f}s")
+print(f"probe flops/dev : {ca.get('flops', 0):.3e}")
+print(f"probe bytes/dev : {ca.get('bytes accessed', 0):.3e}")
+print(f"probe coll operand bytes/dev: {coll.operand_bytes:.3e}")
+print(f"  by_op (GB): "
+      f"{ {k: round(v / 1e9, 3) for k, v in coll.by_op.items()} }")
+print(f"  count: {coll.count}")
+print(f"corrections: flops={cell.flop_correction:.3e} "
+      f"bytes={cell.bytes_correction:.3e} (global)")

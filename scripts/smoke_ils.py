@@ -1,0 +1,33 @@
+"""Quick smoke: run the primary scheduler on J60 and print cost/makespan."""
+import time
+
+from repro.core import (CloudConfig, ILSParams, burst_allocation,
+                        compute_dspot, evaluate, run_ils)
+from repro.sim.workloads import make_job
+
+cfg = CloudConfig()
+job = make_job("J60")
+pool = cfg.instance_pool()
+dspot = compute_dspot(job.deadline_s, job.tasks, cfg)
+print(f"D={job.deadline_s} D_spot={dspot:.0f} pool={len(pool)} tasks={job.n_tasks}")
+
+t0 = time.time()
+params = ILSParams(max_iteration=50, max_attempt=20, seed=1)
+res = run_ils(job.tasks, pool, cfg, dspot, job.deadline_s, params)
+t1 = time.time()
+print(f"ILS: fitness={res.fitness:.4f} evals={res.evaluations} "
+      f"rd_spot={res.rd_spot:.0f} time={t1-t0:.1f}s")
+
+fr = evaluate(res.solution, job.tasks, cfg, res.rd_spot, job.deadline_s)
+print(f"ILS map : cost=${fr.cost:.3f} makespan={fr.makespan:.0f}s "
+      f"feasible={fr.feasible} vms={len(fr.per_vm)}")
+
+ba = burst_allocation(res.solution, job.tasks, cfg, dspot, job.deadline_s,
+                      params.burst_rate)
+fr2 = evaluate(ba.solution, job.tasks, cfg, dspot, job.deadline_s)
+print(f"final   : cost=${fr2.cost:.3f} makespan={fr2.makespan:.0f}s "
+      f"feasible={fr2.feasible} burstables={len(ba.burstable_uids)} "
+      f"moved_b={ba.moved_to_burstable} moved_o={ba.moved_to_ondemand}")
+for uid, vs in sorted(fr2.per_vm.items()):
+    print(f"  {vs.vm.name:24s} tasks={len(vs.assignments):3d} "
+          f"end={vs.end_time:7.0f} cost=${vs.cost:.4f}")

@@ -1,0 +1,28 @@
+"""Smoke: simulate J60 under all three policies, no-hibernation + sc2/sc5."""
+import time
+
+from repro.core.dynamic import BURST_HADS, HADS, ILS_ONDEMAND
+from repro.core.ils import ILSParams
+from repro.core.types import CloudConfig
+from repro.sim.events import SCENARIOS, SC_NONE
+from repro.sim.simulator import simulate
+from repro.sim.workloads import make_job
+
+cfg = CloudConfig()
+job = make_job("J60")
+params = ILSParams(max_iteration=60, max_attempt=25, seed=3)
+
+print(f"{'policy':14s} {'scenario':9s} {'cost':>8s} {'makespan':>9s} "
+      f"{'ok':>3s} {'hib':>4s} {'res':>4s} {'dynOD':>6s} counters")
+for policy in (BURST_HADS, HADS, ILS_ONDEMAND):
+    for sc_name in ("none", "sc2", "sc5"):
+        if policy is ILS_ONDEMAND and sc_name != "none":
+            continue
+        t0 = time.time()
+        r = simulate(job, cfg, policy, SCENARIOS[sc_name], seed=11,
+                     params=params)
+        print(f"{r.policy:14s} {r.scenario:9s} ${r.cost:7.3f} "
+              f"{r.makespan:8.0f}s {str(r.deadline_met):>3s} "
+              f"{r.n_hibernations:4d} {r.n_resumes:4d} "
+              f"{r.n_dynamic_ondemand:6d} {r.counters} "
+              f"({time.time()-t0:.1f}s)")

@@ -1,0 +1,1 @@
+from .runtime import TraceExecutor, TrainTaskPayload  # noqa: F401

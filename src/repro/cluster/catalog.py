@@ -1,0 +1,69 @@
+"""TPU-fleet catalog: the paper's market structure mapped to TPU slices.
+
+DESIGN.md §2.2 — the scheduler core is catalog-agnostic: this module
+instantiates ``CloudConfig`` with preemptible / reserved / under-subscribed
+TPU v5e slices instead of EC2 VMs, and everything above (ILS, burstable
+allocation, migration, work-stealing, the simulator) runs unchanged.
+
+Mapping:
+  spot VM            -> preemptible slice (hibernate == preemption with the
+                        checkpoint retained in the FT store)
+  on-demand VM       -> reserved slice
+  burstable VM       -> under-subscribed multi-tenant slice: the tenant is
+                        guaranteed ``baseline_frac`` of the chips and may
+                        burst into the surplus against accrued chip-credits
+  vCPU               -> worker process slot (one task per slot)
+  memory             -> per-slice host RAM for task working sets
+  Gflops (LINPACK)   -> aggregate bf16 TFLOP/s (197 TF/chip), the e_ij
+                        scaling profile
+
+Prices follow public per-chip v5e rates (~$1.2/h on-demand, ~65 % spot
+discount); slices are quoted per-slice.
+"""
+from __future__ import annotations
+
+from repro.core.types import CloudConfig, VMType
+
+_CHIP_TFLOPS = 197.0
+_OD_PER_CHIP = 1.2          # $/chip-hour
+_SPOT_DISCOUNT = 0.65
+_HOST_RAM_PER_CHIP_MB = 48 * 1024
+
+
+def _slice(name: str, chips: int, *, burstable: bool = False,
+           baseline: float = 1.0) -> VMType:
+    od = _OD_PER_CHIP * chips * (0.8 if burstable else 1.0)
+    return VMType(
+        name=name,
+        vcpus=chips,                        # one task slot per chip
+        memory_mb=chips * _HOST_RAM_PER_CHIP_MB,
+        price_ondemand=od,
+        price_spot=None if burstable else od * (1 - _SPOT_DISCOUNT),
+        burstable=burstable,
+        baseline_frac=baseline,
+        gflops=_CHIP_TFLOPS * chips * (baseline if burstable else 1.0) * 1e3,
+        credit_rate_per_hour=chips * 36.0 if burstable else 0.0,
+    )
+
+
+V5E_4 = _slice("v5e-4", 4)
+V5E_8 = _slice("v5e-8", 8)
+V5E_16 = _slice("v5e-16", 16)
+#: under-subscribed 8-chip slice: 2 chips guaranteed, burst to 8
+V5E_8_SHARED = _slice("v5e-8-shared", 8, burstable=True, baseline=0.25)
+
+
+def tpu_cloud_config(**overrides) -> CloudConfig:
+    """CloudConfig over the TPU fleet (drop-in for the EC2 catalog)."""
+    kw = dict(
+        spot_types=(V5E_4, V5E_8, V5E_16),
+        ondemand_types=(V5E_4, V5E_8, V5E_16),
+        burstable_types=(V5E_8_SHARED,),
+        max_per_type_market=5,
+        gflops_ref=V5E_8.gflops,
+        boot_overhead_s=120.0,       # slice provisioning + runtime start
+        checkpoint_restore_s=30.0,   # pytree restore from the FT store
+        allocation_cycle_s=900.0,
+    )
+    kw.update(overrides)
+    return CloudConfig(**kw)

@@ -1,0 +1,128 @@
+"""Elastic cluster runtime: executes *real JAX work* under the scheduler.
+
+The simulator produces a structured execution trace (dispatch / preempt /
+complete with checkpoint-granular progress).  ``TraceExecutor`` replays
+that trace against real task payloads: a task's abstract progress
+``done_base in [0, total_base]`` maps linearly to training steps; every
+dispatch restores the payload from its last checkpoint and every preempt
+rolls it back — exactly the CRIU semantics of the paper's FT module, with
+JAX pytree checkpoints (repro.ft.checkpoint) instead of process images.
+
+This is how the framework would run on a preemptible TPU fleet: the control
+plane (Burst-HADS) decides *where/when*, the data plane (train steps) runs
+*what*, and the FT module makes migration lossless up to one checkpoint
+period.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.ft.checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class TrainTaskPayload:
+    """A trainable work item: (state, step fn, data) + checkpointing.
+
+    ``total_steps`` maps to the scheduler task's ``total_base``: executing
+    x base-units runs ``x / total_base * total_steps`` steps.
+    """
+
+    name: str
+    total_steps: int
+    make_state: Callable[[], Any]          # fresh TrainState
+    train_step: Callable[[Any, dict], tuple[Any, dict]]   # jitted
+    batch_fn: Callable[[int], dict]        # step -> batch
+    ckpt_dir: str
+    state: Any = None
+    step: int = 0
+    losses: list = dataclasses.field(default_factory=list)
+    restores: int = 0
+
+    def __post_init__(self):
+        self.manager = CheckpointManager(self.ckpt_dir, keep=2)
+
+    def _ensure_state(self):
+        if self.state is None:
+            self.state = self.make_state()
+
+    def run_to(self, target_step: int) -> None:
+        self._ensure_state()
+        target_step = min(target_step, self.total_steps)
+        while self.step < target_step:
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in self.batch_fn(self.step).items()}
+            self.state, metrics = self.train_step(self.state, batch)
+            self.step += 1
+            self.losses.append(float(metrics["loss"]))
+
+    def checkpoint(self) -> None:
+        self._ensure_state()
+        self.manager.save(self.step, self.state,
+                          extra={"losses": self.losses})
+
+    def restore_last(self) -> None:
+        """Roll back to the last durable checkpoint (or step 0)."""
+        last = self.manager.latest_step()
+        self.restores += 1
+        if last is None:
+            self.state, self.step, self.losses = None, 0, []
+            return
+        self._ensure_state()
+        self.step, self.state, extra = self.manager.restore(self.state, last)
+        self.losses = list(extra.get("losses", []))[: self.step]
+
+
+class TraceExecutor:
+    """Replays a simulator trace, driving real payloads.
+
+    ``payloads``: {tid: TrainTaskPayload}; ``total_base``: {tid: float}.
+    """
+
+    def __init__(self, records: list[dict], payloads: dict,
+                 total_base: dict[int, float]):
+        self.records = sorted(records, key=lambda r: (r["t"],
+                                                      r["ev"] != "preempt"))
+        self.payloads = payloads
+        self.total_base = total_base
+        self.log: list[str] = []
+
+    def _steps_for(self, tid: int, base: float) -> int:
+        p = self.payloads[tid]
+        frac = base / self.total_base[tid]
+        return int(round(frac * p.total_steps))
+
+    def run(self) -> dict:
+        for r in self.records:
+            tid = r["tid"]
+            if tid not in self.payloads:
+                continue
+            p = self.payloads[tid]
+            if r["ev"] == "dispatch":
+                # migration restart: resume from the last checkpoint
+                want = self._steps_for(tid, r["from_base"])
+                if p.step > want:
+                    p.restore_last()
+                self.log.append(f"[{r['t']:8.1f}] {p.name} -> {r['vm']} "
+                                f"(step {p.step})")
+            elif r["ev"] == "preempt":
+                # progress up to the checkpointed rollback point survives
+                keep = self._steps_for(tid, r["to_base"])
+                p.run_to(keep)
+                p.checkpoint()
+                self.log.append(f"[{r['t']:8.1f}] {p.name} preempted on "
+                                f"{r['vm']} @step {p.step}")
+            elif r["ev"] == "complete":
+                p.run_to(p.total_steps)
+                p.checkpoint()
+                self.log.append(f"[{r['t']:8.1f}] {p.name} complete "
+                                f"({p.step} steps)")
+        return {tid: {"steps": p.step, "restores": p.restores,
+                      "final_loss": p.losses[-1] if p.losses else None,
+                      "first_loss": p.losses[0] if p.losses else None}
+                for tid, p in self.payloads.items()}

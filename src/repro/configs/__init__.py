@@ -1,0 +1,53 @@
+"""Architecture registry: the ten assigned configs + tiny presets.
+
+``get_config(name)`` accepts the assigned arch ids (with - or _).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "llama4-scout-17b-a16e",
+    "arctic-480b",
+    "starcoder2-7b",
+    "stablelm-1.6b",
+    "chatglm3-6b",
+    "stablelm-12b",
+    "musicgen-large",
+    "hymba-1.5b",
+    "phi-3-vision-4.2b",
+    "rwkv6-7b",
+)
+
+_MODULES = {
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "arctic-480b": "arctic_480b",
+    "starcoder2-7b": "starcoder2_7b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "chatglm3-6b": "chatglm3_6b",
+    "stablelm-12b": "stablelm_12b",
+    "musicgen-large": "musicgen_large",
+    "hymba-1.5b": "hymba_1_5b",
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+    "rwkv6-7b": "rwkv6_7b",
+}
+
+
+def normalize(name: str) -> str:
+    n = name.lower().replace("_", "-")
+    for a in ARCHS:
+        if n == a or n == a.replace("-", ""):
+            return a
+    raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+
+
+def get_config(name: str, tiny: bool = False) -> ModelConfig:
+    arch = normalize(name)
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    cfg: ModelConfig = mod.CONFIG
+    return cfg.tiny() if tiny else cfg
+
+
+from .shapes import SHAPES, cells_for, input_shape  # noqa: E402,F401

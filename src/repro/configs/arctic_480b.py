@@ -1,0 +1,15 @@
+"""Snowflake Arctic 480B [hf:Snowflake/snowflake-arctic-base].
+
+Dense-MoE hybrid: every layer has a dense SwiGLU residual branch in
+parallel with a 128-expert top-2 MoE (ffn="moe_dense").
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=4864, vocab=32_000,
+    mixer="attention", ffn="moe_dense",
+    moe_experts=128, moe_topk=2,
+    fsdp=True,
+)

@@ -1,0 +1,10 @@
+"""ChatGLM3-6B [arXiv:2406.12793]: 2d RoPE (half dims), extreme GQA kv=2."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chatglm3-6b",
+    n_layers=28, d_model=4096, n_heads=32, n_kv_heads=2,
+    d_ff=13_696, vocab=65_024,
+    mixer="attention", ffn="swiglu",
+    rope_fraction=0.5,
+)

@@ -1,0 +1,13 @@
+"""Hymba-1.5B [arXiv:2411.13676]: parallel attention + Mamba heads per
+layer, sliding-window attention + O(1) SSM state => runs long_500k.
+(Meta-tokens are omitted — DESIGN.md §5.)"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, d_head=64,
+    d_ff=5504, vocab=32_001,
+    mixer="hymba", ffn="swiglu",
+    ssm_state=16, window=1024,
+    subquadratic=True,
+)

@@ -1,0 +1,15 @@
+"""Llama-4 Scout 17B-active/16-expert [hf:meta-llama/Llama-4-Scout-17B-16E].
+
+MoE top-1 routing with a shared expert; GQA kv=8.  109B total / 17B active.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=8192, vocab=202_048,
+    mixer="attention", ffn="moe",
+    moe_experts=16, moe_topk=1, moe_shared_expert=True,
+    rope_theta=500_000.0,
+    fsdp=True,
+)

@@ -1,0 +1,15 @@
+"""MusicGen-large [arXiv:2306.05284]: decoder-only over EnCodec tokens.
+
+Backbone only — the EnCodec frontend is a stub; input_specs() provides
+precomputed frame embeddings (input_mode="embeds"); decode consumes
+EnCodec code ids (vocab=2048).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab=2048,
+    mixer="attention", ffn="gelu",
+    input_mode="embeds",
+)

@@ -1,0 +1,14 @@
+"""Phi-3-vision 4.2B [hf:microsoft/Phi-3-vision-128k-instruct].
+
+phi3-mini backbone; the CLIP vision frontend is a stub — input_specs()
+provides precomputed patch embeddings (input_mode="embeds").
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab=32_064,
+    mixer="attention", ffn="swiglu",
+    input_mode="embeds",
+)

@@ -1,0 +1,12 @@
+"""RWKV-6 (Finch) 7B [arXiv:2404.05892]: attention-free linear RNN with
+data-dependent decay; O(1) decode state => runs long_500k."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    n_layers=32, d_model=4096, n_heads=0, n_kv_heads=0,
+    d_ff=14_336, vocab=65_536,
+    mixer="rwkv6", ffn="rwkv_cm",
+    rwkv_head_size=64,
+    subquadratic=True,
+)

@@ -1,0 +1,50 @@
+"""Assigned input-shape set for the LM-family architectures (40 cells).
+
+``train_*`` lowers train_step; ``prefill_*`` lowers the prefill forward;
+``decode_*`` / ``long_*`` lower serve_step (one token against a running
+decode state).  ``long_500k`` requires sub-quadratic decode state and is
+skipped for pure full-attention archs (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def cells_for(cfg: ModelConfig) -> list[ShapeSpec]:
+    """The (arch x shape) cells that apply to this architecture."""
+    cells = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if cfg.subquadratic:
+        cells.append(SHAPES["long_500k"])
+    return cells
+
+
+def skipped_for(cfg: ModelConfig) -> list[tuple[str, str]]:
+    if cfg.subquadratic:
+        return []
+    return [("long_500k",
+             "pure full-attention arch: O(S) KV state at 524288 tokens is "
+             "not servable; sub-quadratic state required (DESIGN.md §4)")]
+
+
+def input_shape(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Human-readable summary used by benchmarks/EXPERIMENTS."""
+    return {"arch": cfg.name, "shape": shape.name, "kind": shape.kind,
+            "seq": shape.seq_len, "batch": shape.global_batch}

@@ -1,0 +1,10 @@
+"""StableLM-2 12B [hf:stabilityai/stablelm-2-12b]: GQA kv=8, partial rotary."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-12b",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+    d_ff=13_824, vocab=100_352,
+    mixer="attention", ffn="swiglu",
+    rope_fraction=0.25,
+)

@@ -1,0 +1,11 @@
+"""StableLM-2 1.6B [hf:stabilityai/stablelm-2-1_6b]: MHA (kv=32), partial
+rotary (25%)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b",
+    n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=5632, vocab=100_352,
+    mixer="attention", ffn="swiglu",
+    rope_fraction=0.25,
+)

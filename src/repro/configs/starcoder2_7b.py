@@ -1,0 +1,9 @@
+"""StarCoder2-7B [arXiv:2402.19173]: dense GELU MLP, GQA kv=4, RoPE."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b",
+    n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4,
+    d_ff=18_432, vocab=49_152,
+    mixer="attention", ffn="gelu",
+)

@@ -1,0 +1,8 @@
+"""Burst-HADS core: the paper's contribution as a composable module."""
+from .types import (CloudConfig, ExecMode, Job, Market, Solution, TaskSpec,  # noqa: F401
+                    VMInstance, VMType, empty_solution, exec_time_matrix)
+from .dspot import compute_dspot  # noqa: F401
+from .fitness import evaluate, pack_solution, check_schedule  # noqa: F401
+from .greedy import initial_solution  # noqa: F401
+from .ils import ILSParams, ILSResult, run_ils  # noqa: F401
+from .burst_alloc import burst_allocation, BurstAllocation  # noqa: F401

@@ -1,0 +1,80 @@
+"""Dynamic Scheduling Module (§III-D) — policies + primary-map planning.
+
+Three policies are implemented, matching the paper's §IV comparison:
+
+* ``BURST_HADS`` — ILS primary map over spots + burstable allocation;
+  immediate checkpoint-rollback migration on hibernation (Alg. 4);
+  work-stealing on resume/idle (Alg. 5); AC termination policy.
+* ``HADS`` — the previous framework [1]: greedy cost-only primary map over
+  spots, no burstables, no work-stealing; hibernated VMs keep their tasks
+  frozen in place and migration is *postponed* to the latest safe instant
+  (HADS bets on the VM resuming to save money).
+* ``ILS_ONDEMAND`` — the ILS map built over regular on-demand VMs only;
+  no spot, so no hibernation events apply.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .burst_alloc import burst_allocation
+from .dspot import compute_dspot
+from .greedy import initial_solution
+from .ils import ILSParams, run_ils
+from .types import CloudConfig, Job, Market, Solution
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    name: str
+    primary: str                 # "ils" | "greedy"
+    market: Market               # market of the primary map
+    use_burstables: bool         # Algorithm 1 part 2
+    immediate_migration: bool    # True: Alg. 4 on hibernate; False: deferred
+    work_stealing: bool          # Algorithm 5
+    freeze_in_place: bool        # hibernation preserves task memory (HADS)
+
+
+BURST_HADS = PolicyConfig("burst-hads", primary="ils", market=Market.SPOT,
+                          use_burstables=True, immediate_migration=True,
+                          work_stealing=True, freeze_in_place=False)
+HADS = PolicyConfig("hads", primary="greedy", market=Market.SPOT,
+                    use_burstables=False, immediate_migration=False,
+                    work_stealing=False, freeze_in_place=True)
+ILS_ONDEMAND = PolicyConfig("ils-ondemand", primary="ils",
+                            market=Market.ONDEMAND, use_burstables=False,
+                            immediate_migration=True, work_stealing=False,
+                            freeze_in_place=False)
+
+POLICIES = {p.name: p for p in (BURST_HADS, HADS, ILS_ONDEMAND)}
+
+
+@dataclasses.dataclass
+class PrimaryPlan:
+    solution: Solution
+    dspot: float
+    policy: PolicyConfig
+
+
+def build_primary_map(job: Job, cfg: CloudConfig, policy: PolicyConfig,
+                      params: ILSParams = ILSParams()) -> PrimaryPlan:
+    """Algorithm 1 end-to-end for the chosen policy."""
+    pool = cfg.instance_pool()
+    if policy.market == Market.SPOT:
+        dspot = compute_dspot(job.deadline_s, job.tasks, cfg)
+    else:
+        dspot = job.deadline_s  # on-demand VMs don't hibernate
+
+    if policy.primary == "ils":
+        res = run_ils(job.tasks, pool, cfg, dspot, job.deadline_s, params,
+                      market=policy.market)
+        sol = res.solution
+    else:
+        sol = initial_solution(job.tasks, pool, cfg, dspot,
+                               market=policy.market)
+        sol.selected_uids = set(sol.used_uids())
+
+    if policy.use_burstables:
+        sol = burst_allocation(sol, job.tasks, cfg, dspot, job.deadline_s,
+                               params.burst_rate).solution
+    return PrimaryPlan(solution=sol, dspot=dspot, policy=policy)

@@ -1,0 +1,71 @@
+"""Cached exact evaluator used by the sequential search (Algorithms 1–3).
+
+Local-search moves touch at most two VMs, so per-VM packings are memoised on
+the (vm, task-multiset, modes) key.  The D_spot limit is applied at
+aggregation time, which keeps the cache valid across RD_spot relaxations.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .fitness import (FitnessResult, INFEASIBLE, VMSchedule, _pack_vm,
+                      cost_scale)
+from .types import CloudConfig, ExecMode, Solution, TaskSpec
+
+
+class CachedEvaluator:
+    def __init__(self, tasks: Sequence[TaskSpec], cfg: CloudConfig,
+                 deadline: float, alpha: float = 0.5):
+        self.tasks = tasks
+        self.cfg = cfg
+        self.deadline = deadline
+        self.alpha = alpha
+        self.scale = cost_scale(tasks, cfg)
+        self._cache: dict[tuple, tuple[float, float] | None] = {}
+        self.n_evals = 0
+        self.n_hits = 0
+
+    def _vm_key(self, uid: int, idx: np.ndarray, sol: Solution) -> tuple:
+        return (uid, tuple(sorted((int(i), int(sol.modes[i])) for i in idx)))
+
+    def _pack_one(self, sol: Solution, uid: int, idx: np.ndarray
+                  ) -> tuple[float, float] | None:
+        """-> (end_time, cost) for one VM, or None if memory-infeasible."""
+        key = self._vm_key(uid, idx, sol)
+        if key in self._cache:
+            self.n_hits += 1
+            return self._cache[key]
+        vm = sol.pool[uid]
+        ts = [self.tasks[i] for i in idx]
+        ms = [ExecMode.BASELINE if sol.modes[i] else ExecMode.FULL for i in idx]
+        packed = _pack_vm(vm, ts, ms, self.cfg, release_s=self.cfg.boot_overhead_s)
+        if packed is None:
+            out = None
+        else:
+            end = max((a.end for a in packed), default=0.0)
+            out = (end, max(0.0, end - self.cfg.boot_overhead_s) * vm.price_per_sec)
+        self._cache[key] = out
+        return out
+
+    def fitness(self, sol: Solution, dspot: float) -> float:
+        """Eq. 8 value (scalar).  INFEASIBLE on any violated constraint."""
+        self.n_evals += 1
+        if np.any(sol.alloc < 0):
+            return INFEASIBLE
+        cost = 0.0
+        makespan = 0.0
+        for uid in sol.used_uids():
+            res = self._pack_one(sol, uid, sol.tasks_on(uid))
+            if res is None:
+                return INFEASIBLE
+            end, c = res
+            vm = sol.pool[uid]
+            limit = dspot if vm.is_spot else self.deadline
+            if end > limit + 1e-9:
+                return INFEASIBLE
+            cost += c
+            makespan = max(makespan, end)
+        return self.alpha * (cost / self.scale) + \
+            (1.0 - self.alpha) * (makespan / self.deadline)

@@ -1,0 +1,53 @@
+"""Eq. 1–6 — the exact static formulation, as a tiny-instance oracle.
+
+The scheduling problem is NP-complete (Ullman [12]); for instances with a
+handful of tasks/VMs we can enumerate every allocation vector, pack each one
+exactly (Eq. 2/3 via the fitness packer) and minimise Eq. 1.  The ILS is
+validated against this optimum in tests/test_ils_optimality.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Sequence
+
+import numpy as np
+
+from .fitness import evaluate, FitnessResult
+from .types import CloudConfig, Market, Solution, TaskSpec, VMInstance, empty_solution
+
+
+@dataclasses.dataclass
+class ExactResult:
+    solution: Solution | None
+    result: FitnessResult | None
+    n_enumerated: int
+
+
+def solve_exact(tasks: Sequence[TaskSpec], pool: list[VMInstance],
+                cfg: CloudConfig, dspot: float, deadline: float,
+                alpha: float = 0.5, spot_only: bool = True,
+                max_nodes: int = 2_000_000) -> ExactResult:
+    """Brute-force optimum of Eq. 1 over allocation vectors.
+
+    ``spot_only`` restricts to M^s as in the paper's formulation (§III-C,
+    which is written over spot VMs; burstables enter in Algorithm 1 part 2).
+    """
+    uids = [vm.uid for vm in pool
+            if (vm.market == Market.SPOT) or not spot_only]
+    n = len(tasks)
+    if len(uids) ** n > max_nodes:
+        raise ValueError(f"instance too large to enumerate: {len(uids)}^{n}")
+
+    best_sol: Solution | None = None
+    best_res: FitnessResult | None = None
+    count = 0
+    for combo in itertools.product(uids, repeat=n):
+        count += 1
+        sol = empty_solution(n, pool)
+        sol.alloc[:] = combo
+        sol.selected_uids = set(combo)
+        res = evaluate(sol, tasks, cfg, dspot, deadline, alpha)
+        if res.feasible and (best_res is None or res.fitness < best_res.fitness):
+            best_sol, best_res = sol, res
+    return ExactResult(best_sol, best_res, count)

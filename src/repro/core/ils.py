@@ -1,0 +1,97 @@
+"""Algorithm 1 (part 1) — Iterated Local Search primary scheduler.
+
+Perturbations (paper §III-C):
+  1. include a not-yet-selected spot VM into the current solution;
+  2. *relaxing perturbation*: after ``max_failed`` iterations without
+     improvement, RD_spot grows by ``relax_rate`` — the resulting D_spot
+     violations are later repaired by the burstable allocation (part 2).
+
+Interpretation note (the pseudocode passes ``D_spot`` everywhere): we track
+the incumbent under the *current* RD_spot, which is the only reading under
+which the relaxing perturbation can ever produce an accepted solution; the
+final map is re-validated against the original D_spot and any violating task
+is handed to ``burst_alloc`` exactly as §III-C prescribes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .evaluator import CachedEvaluator
+from .greedy import initial_solution
+from .local_search import local_search
+from .types import CloudConfig, Market, Solution, TaskSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ILSParams:
+    """Paper §IV empirically determined parameters."""
+
+    alpha: float = 0.5
+    max_iteration: int = 200
+    max_attempt: int = 50
+    swap_rate: float = 0.10
+    max_failed: int = 20
+    relax_rate: float = 0.25
+    burst_rate: float = 0.2
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class ILSResult:
+    solution: Solution
+    fitness: float
+    rd_spot: float          # possibly relaxed D_spot the incumbent satisfies
+    iterations: int
+    evaluations: int
+    history: list[float]    # incumbent fitness per iteration
+
+
+def run_ils(tasks: Sequence[TaskSpec], pool: list[Solution | object],
+            cfg: CloudConfig, dspot: float, deadline: float,
+            params: ILSParams = ILSParams(),
+            market: Market = Market.SPOT) -> ILSResult:
+    rng = np.random.default_rng(params.seed)
+    evaluator = CachedEvaluator(tasks, cfg, deadline, params.alpha)
+
+    s = initial_solution(tasks, pool, cfg, dspot, market=market)
+    s = local_search(s, evaluator, dspot, params.max_attempt,
+                     params.swap_rate, rng)
+    s_best = s.copy()
+    rd_spot = dspot
+    best_fit = evaluator.fitness(s_best, rd_spot)
+    history = [best_fit]
+
+    unselected = [vm.uid for vm in pool
+                  if vm.market == market and vm.uid not in s.selected_uids]
+    rng.shuffle(unselected)
+
+    last_best = 0
+    for i in range(params.max_iteration):
+        # Perturbation 1: add an unused spot VM as a new destination.
+        if unselected:
+            vm_j = unselected.pop()
+            s.selected_uids.add(vm_j)
+        # Perturbation 2: relax RD_spot after too many failures.
+        failed = i - last_best
+        if failed > params.max_failed:
+            rd_spot += params.relax_rate * rd_spot
+            best_fit = evaluator.fitness(s_best, rd_spot)
+            last_best = i  # reset the failure counter after a relaxation
+
+        s = local_search(s, evaluator, rd_spot, params.max_attempt,
+                         params.swap_rate, rng)
+        fit = evaluator.fitness(s, rd_spot)
+        if fit < best_fit:
+            s_best = s.copy()
+            best_fit = fit
+            last_best = i
+        history.append(best_fit)
+
+    s_best.prune_selected()
+    s_best.selected_uids |= set(s_best.used_uids())
+    return ILSResult(solution=s_best, fitness=best_fit, rd_spot=rd_spot,
+                     iterations=params.max_iteration,
+                     evaluations=evaluator.n_evals, history=history)

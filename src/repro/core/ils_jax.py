@@ -1,0 +1,142 @@
+"""Population-based (batched) ILS — the TPU-resident search (DESIGN.md §2.1).
+
+The paper's single sequential chain becomes P parallel chains; each
+iteration proposes K candidate moves per chain (n tasks relocated to one
+destination VM — the paper's move type) and evaluates the whole [P*K]
+population in one fused fitness call backed by the ``sched_fitness`` Pallas
+kernel (interpret mode on CPU, native on TPU).
+
+Search uses the LPT lower-bound fitness (``fitness_fast``); every accepted
+incumbent is re-validated with the exact packer before being returned, so
+the paper's semantics hold for all reported solutions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.sched_fitness.ops import population_fitness
+from .evaluator import CachedEvaluator
+from .fitness import cost_scale
+from .greedy import initial_solution
+from .types import (CloudConfig, Market, Solution, TaskSpec, VMInstance,
+                    exec_time_matrix)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedILSParams:
+    population: int = 32
+    iterations: int = 60
+    proposals: int = 16        # candidate moves per chain per iteration
+    swap_tasks: int = 4        # tasks relocated per candidate
+    alpha: float = 0.5
+    seed: int = 0
+    interpret: bool = True     # Pallas interpret mode (CPU container)
+
+
+def _problem_arrays(tasks: Sequence[TaskSpec], pool: list[VMInstance],
+                    cfg: CloudConfig):
+    e = jnp.asarray(exec_time_matrix(tasks, pool, cfg), jnp.float32)
+    rm = jnp.asarray([t.memory_mb for t in tasks], jnp.float32)
+    cores = jnp.asarray([vm.vcpus for vm in pool], jnp.float32)
+    mem = jnp.asarray([vm.memory_mb for vm in pool], jnp.float32)
+    price = jnp.asarray([vm.price_per_sec for vm in pool], jnp.float32)
+    spot = jnp.asarray([1.0 if vm.is_spot else 0.0 for vm in pool],
+                       jnp.float32)
+    return e, rm, cores, mem, price, spot
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n", "interpret", "v"))
+def _ils_step(alloc, best_fit, key, active_uids, e, rm, cores, mem, price,
+              spot, *, k: int, n: int, v: int, dspot, deadline, alpha,
+              scale, boot_s, interpret: bool):
+    """One batched iteration: propose K moves/chain, accept improvements."""
+    p, b = alloc.shape
+    kt, kd, ka = jax.random.split(key, 3)
+    t_idx = jax.random.randint(kt, (p, k, n), 0, b)
+    d_pos = jax.random.randint(kd, (p, k), 0, active_uids.shape[0])
+    dest = active_uids[d_pos]                                # [P, K]
+
+    cand = jnp.broadcast_to(alloc[:, None], (p, k, b))       # [P, K, B]
+    pi = jax.lax.broadcasted_iota(jnp.int32, (p, k, n), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (p, k, n), 1)
+    cand = cand.at[pi, ki, t_idx].set(
+        jnp.broadcast_to(dest[:, :, None], (p, k, n)))
+
+    fit, _, _ = population_fitness(
+        cand.reshape(p * k, b), e, rm, cores, mem, price, spot,
+        dspot=dspot, deadline=deadline, alpha=alpha, cost_scale=scale,
+        boot_s=boot_s, interpret=interpret)
+    fit = fit.reshape(p, k)
+    j = jnp.argmin(fit, axis=1)
+    best_cand_fit = jnp.take_along_axis(fit, j[:, None], axis=1)[:, 0]
+    best_cand = jnp.take_along_axis(
+        cand, j[:, None, None], axis=1)[:, 0]                # [P, B]
+
+    improved = best_cand_fit < best_fit
+    alloc = jnp.where(improved[:, None], best_cand, alloc)
+    best_fit = jnp.where(improved, best_cand_fit, best_fit)
+    return alloc, best_fit
+
+
+@dataclasses.dataclass
+class BatchedILSResult:
+    solution: Solution
+    fitness_bound: float       # LPT-bound fitness of the winner
+    history: np.ndarray        # best bound per iteration
+    evaluations: int
+
+
+def run_batched_ils(tasks: Sequence[TaskSpec], pool: list[VMInstance],
+                    cfg: CloudConfig, dspot: float, deadline: float,
+                    params: BatchedILSParams = BatchedILSParams(),
+                    market: Market = Market.SPOT) -> BatchedILSResult:
+    rng = np.random.default_rng(params.seed)
+    e, rm, cores, mem, price, spot = _problem_arrays(tasks, pool, cfg)
+    scale = cost_scale(tasks, cfg)
+
+    seed_sol = initial_solution(tasks, pool, cfg, dspot, market=market)
+    active = sorted(set(seed_sol.used_uids()) |
+                    {vm.uid for vm in pool if vm.market == market})
+    active_uids = jnp.asarray(active, jnp.int32)
+
+    p = params.population
+    alloc0 = np.tile(seed_sol.alloc, (p, 1)).astype(np.int32)
+    # diversify chains 1..P-1 with random relocations
+    for i in range(1, p):
+        idx = rng.integers(0, len(tasks), size=max(1, len(tasks) // 10))
+        alloc0[i, idx] = rng.choice(active, size=len(idx))
+    alloc = jnp.asarray(alloc0)
+
+    kw = dict(k=params.proposals, n=params.swap_tasks,
+              v=len(pool), dspot=dspot, deadline=deadline,
+              alpha=params.alpha, scale=scale, boot_s=cfg.boot_overhead_s,
+              interpret=params.interpret)
+    fit0, _, _ = population_fitness(
+        alloc, e, rm, cores, mem, price, spot, dspot=dspot,
+        deadline=deadline, alpha=params.alpha, cost_scale=scale,
+        boot_s=cfg.boot_overhead_s, interpret=params.interpret)
+    best_fit = fit0
+
+    key = jax.random.PRNGKey(params.seed)
+    history = []
+    for _ in range(params.iterations):
+        key, k1 = jax.random.split(key)
+        alloc, best_fit = _ils_step(alloc, best_fit, k1, active_uids, e, rm,
+                                    cores, mem, price, spot, **kw)
+        history.append(float(jnp.min(best_fit)))
+
+    win = int(jnp.argmin(best_fit))
+    sol = Solution(alloc=np.asarray(alloc[win]),
+                   modes=np.zeros(len(tasks), np.int8), pool=list(pool))
+    sol.selected_uids = set(sol.used_uids())
+    evals = p + params.population * params.proposals * params.iterations
+    return BatchedILSResult(solution=sol,
+                            fitness_bound=float(best_fit[win]),
+                            history=np.asarray(history),
+                            evaluations=evals)

@@ -1,0 +1,61 @@
+"""Algorithm 3 — swap-based local search.
+
+Faithful to the paper: one randomly chosen destination VM per call; each
+attempt moves ``n = swap_rate * |B|`` randomly chosen tasks to it, evaluating
+the fitness after *every* single move and snapshotting improvements.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .evaluator import CachedEvaluator
+from .types import Solution
+
+
+def local_search(sol: Solution, evaluator: CachedEvaluator, dspot: float,
+                 max_attempt: int, swap_rate: float,
+                 rng: np.random.Generator) -> Solution:
+    best = sol.copy()
+    best_fit = evaluator.fitness(best, dspot)
+    cur = sol.copy()
+    n = max(1, int(round(swap_rate * len(sol.alloc))))
+
+    candidates = sorted(cur.selected_uids)
+    if not candidates:
+        return best
+    vm_dest = int(rng.choice(candidates))
+
+    for _ in range(max_attempt):
+        for _ in range(n):
+            ti = int(rng.integers(len(cur.alloc)))
+            if cur.alloc[ti] == vm_dest:
+                continue
+            cur.alloc[ti] = vm_dest
+            fit = evaluator.fitness(cur, dspot)
+            if fit < best_fit:
+                best = cur.copy()
+                best_fit = fit
+    return best
+
+
+def greedy_repair(sol: Solution, evaluator: CachedEvaluator, dspot: float,
+                  tasks_idx: Sequence[int], rng: np.random.Generator
+                  ) -> Solution:
+    """Best-improvement relocation of specific tasks (used by tests and the
+    burst allocator when it needs to unstick a violating task)."""
+    cur = sol.copy()
+    for ti in tasks_idx:
+        best_uid, best_fit = int(cur.alloc[ti]), evaluator.fitness(cur, dspot)
+        for uid in sorted(cur.selected_uids):
+            if uid == cur.alloc[ti]:
+                continue
+            prev = cur.alloc[ti]
+            cur.alloc[ti] = uid
+            fit = evaluator.fitness(cur, dspot)
+            if fit < best_fit:
+                best_fit, best_uid = fit, uid
+            cur.alloc[ti] = prev
+        cur.alloc[ti] = best_uid
+    return cur

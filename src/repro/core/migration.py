@@ -1,0 +1,138 @@
+"""Algorithm 4 — Burst Migration Procedure.
+
+On spot hibernation the affected tasks are re-placed through a four-attempt
+cascade, always respecting the deadline D:
+
+  1. idle *burstable* VM, burst mode, with CPU-credit reservation
+     (``rcc = ceil(e / burst_period)``);
+  2. idle non-burstable VM (spot first) — spot targets must also keep the
+     spare-time guarantee (a further hibernation must stay absorbable);
+  3. busy non-burstable VM (spot first) — task is queued;
+  4. a *new* regular on-demand VM (cheapest first), launched on the fly.
+
+Tasks with checkpoints are migrated first (they lose the least work).
+"""
+from __future__ import annotations
+
+import math
+from typing import TYPE_CHECKING
+
+from .runtime import Cluster, TaskRun, VMRuntime, VMState
+from .types import CloudConfig, ExecMode, Market
+
+if TYPE_CHECKING:  # engine protocol (sim.simulator.Simulator satisfies it)
+    from typing import Protocol
+
+    class Engine(Protocol):
+        cluster: Cluster
+        deadline: float
+        cfg: CloudConfig
+
+        def assign(self, vmrt: VMRuntime, task: TaskRun, now: float,
+                   mode: ExecMode) -> None: ...
+        def launch_vm(self, vmrt: VMRuntime, now: float) -> None: ...
+        def count(self, key: str) -> None: ...
+
+
+def check_migration(task: TaskRun, vmrt: VMRuntime, now: float,
+                    deadline: float, cfg: CloudConfig,
+                    mode: ExecMode = ExecMode.FULL) -> bool:
+    """The paper's ``check_migration``: memory, completion ≤ D, and — for
+    spot targets — the spare-time rule of §III-E."""
+    if task.spec.memory_mb > vmrt.vm.memory_mb:
+        return False
+    end = vmrt.estimate_completion(task, now, mode)
+    if end > deadline + 1e-9:
+        return False
+    if vmrt.vm.is_spot:
+        longest = max(
+            vmrt.longest_committed_exec(),
+            task.spec.exec_time(vmrt.vm.vm_type, cfg.gflops_ref))
+        ready = vmrt.estimate_ready_times(now)
+        all_end = max(max(ready), end)
+        if deadline - all_end < longest - 1e-9:
+            return False
+    return True
+
+
+def sort_affected(affected: list[TaskRun]) -> list[TaskRun]:
+    """Checkpointed (previously executing) tasks first, most progress first."""
+    return sorted(affected, key=lambda t: (not t.has_checkpoint,
+                                           -t.done_base, t.spec.tid))
+
+
+def required_credits(task: TaskRun, vmrt: VMRuntime, cfg: CloudConfig) -> float:
+    e = task.run_time_on(vmrt.vm, cfg, ExecMode.FULL,
+                         cfg.checkpoint_restore_s)
+    return math.ceil(e / cfg.burst_period_s)
+
+
+def burst_migration(engine: "Engine", affected: list[TaskRun], now: float,
+                    allow_burstable: bool = True) -> list[TaskRun]:
+    """Runs Algorithm 4; returns tasks that could not be migrated (should be
+    empty whenever the D_spot slack was honoured)."""
+    cluster, cfg, deadline = engine.cluster, engine.cfg, engine.deadline
+    failed: list[TaskRun] = []
+
+    for task in sort_affected(affected):
+        migrated = False
+
+        # -- Attempt 1: idle burstable VM, burst mode, credit reservation.
+        if allow_burstable:
+            for vmrt in sorted((v for v in cluster.idle if v.vm.is_burstable),
+                               key=lambda v: v.vm.uid):
+                vmrt.accrue(now)
+                rcc = required_credits(task, vmrt, cfg)
+                if (vmrt.credits - vmrt.reserved_credits) > rcc and \
+                        check_migration(task, vmrt, now, deadline, cfg,
+                                        ExecMode.FULL):
+                    vmrt.reserved_credits += rcc
+                    task.reserved_rcc = rcc
+                    engine.assign(vmrt, task, now, ExecMode.FULL)
+                    engine.count("migrations_burst")
+                    migrated = True
+                    break
+        if migrated:
+            continue
+
+        # -- Attempt 2: idle NON-burstable VM (spot first).
+        for vmrt in sorted((v for v in cluster.idle if not v.vm.is_burstable),
+                           key=lambda v: (not v.vm.is_spot, v.vm.uid)):
+            if check_migration(task, vmrt, now, deadline, cfg):
+                engine.assign(vmrt, task, now, ExecMode.FULL)
+                engine.count("migrations_idle")
+                migrated = True
+                break
+        if migrated:
+            continue
+
+        # -- Attempt 3: busy NON-burstable VM (spot first) — queue it.
+        # VMs launched earlier in this very procedure are in BR per Alg. 4
+        # line 45, hence LAUNCHING counts as busy here.
+        busy_like = cluster.by_state(VMState.BUSY, VMState.LAUNCHING)
+        for vmrt in sorted((v for v in busy_like if not v.vm.is_burstable),
+                           key=lambda v: (not v.vm.is_spot, v.vm.uid)):
+            if check_migration(task, vmrt, now, deadline, cfg):
+                engine.assign(vmrt, task, now, ExecMode.FULL)
+                engine.count("migrations_busy")
+                migrated = True
+                break
+        if migrated:
+            continue
+
+        # -- Attempt 4: launch a new regular on-demand VM (cheapest first).
+        for vmrt in sorted(cluster.unlaunched(Market.ONDEMAND),
+                           key=lambda v: v.vm.price_per_sec):
+            e = task.run_time_on(vmrt.vm, cfg, ExecMode.FULL,
+                                 cfg.checkpoint_restore_s)
+            if now + cfg.boot_overhead_s + e <= deadline + 1e-9 and \
+                    task.spec.memory_mb <= vmrt.vm.memory_mb:
+                engine.launch_vm(vmrt, now)
+                engine.assign(vmrt, task, now, ExecMode.FULL)
+                engine.count("migrations_new_od")
+                migrated = True
+                break
+
+        if not migrated:
+            failed.append(task)
+    return failed

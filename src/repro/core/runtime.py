@@ -1,0 +1,343 @@
+"""Runtime state shared by the dynamic scheduler and the simulator.
+
+Models VM lifecycle (§III-D states: busy / idle / hibernated / terminated),
+per-second billing that pauses during hibernation, the burstable CPU-credit
+regime, task progress with checkpoint granularity (FT module), and the
+completion-time estimation used by ``check_migration``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Callable, Iterable, Optional
+
+from .types import CloudConfig, ExecMode, Market, TaskSpec, VMInstance
+
+
+class VMState(enum.Enum):
+    NOT_LAUNCHED = "not_launched"
+    LAUNCHING = "launching"
+    BUSY = "busy"
+    IDLE = "idle"
+    HIBERNATED = "hibernated"
+    TERMINATED = "terminated"
+
+
+class TaskState(enum.Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    DONE = "done"
+
+
+#: fixed wall-clock cost of writing one checkpoint (CRIU-equivalent)
+CHECKPOINT_WRITE_S = 5.0
+
+
+@dataclasses.dataclass
+class TaskRun:
+    """A task instance with progress + checkpoint bookkeeping.
+
+    ``total_base`` is the work in reference-machine seconds, inflated by the
+    checkpoint overhead budget ``ovh`` (paper §IV: ovh = 10%).  ``done_base``
+    only ever advances to checkpoint boundaries (or to completion), which is
+    exactly what survives a hibernation/migration.
+    """
+
+    spec: TaskSpec
+    ovh: float = 0.10
+    state: TaskState = TaskState.PENDING
+    vm_uid: int = -1
+    mode: ExecMode = ExecMode.FULL
+    done_base: float = 0.0
+    started_at: float = -1.0
+    speed: float = 0.0           # base-units per second on the current VM
+    expected_end: float = -1.0
+    epoch: int = 0               # dispatch epoch; stale TASK_DONE events ignored
+    finished_at: float = -1.0
+    migrations: int = 0
+    reserved_rcc: float = 0.0    # CPU credits reserved for this task (burst)
+
+    @property
+    def total_base(self) -> float:
+        return self.spec.base_time * (1.0 + self.ovh)
+
+    @property
+    def cp_period_base(self) -> float:
+        n_cp = max(1, int(self.ovh * self.spec.base_time / CHECKPOINT_WRITE_S))
+        return self.total_base / (n_cp + 1)
+
+    @property
+    def has_checkpoint(self) -> bool:
+        return self.done_base > 0.0
+
+    def remaining_base(self) -> float:
+        return max(0.0, self.total_base - self.done_base)
+
+    def exec_speed(self, vm: VMInstance, cfg: CloudConfig,
+                   mode: ExecMode) -> float:
+        s = vm.vm_type.gflops / cfg.gflops_ref
+        if mode == ExecMode.BASELINE:
+            s *= vm.vm_type.baseline_frac
+        return s
+
+    def run_time_on(self, vm: VMInstance, cfg: CloudConfig, mode: ExecMode,
+                    restore_s: float = 0.0) -> float:
+        """Wall seconds to finish on ``vm`` (+ checkpoint restore if resuming)."""
+        t = self.remaining_base() / self.exec_speed(vm, cfg, mode)
+        if self.has_checkpoint:
+            t += restore_s
+        return t
+
+    def preempt(self, now: float) -> None:
+        """Roll progress back to the last checkpoint boundary (§III-E)."""
+        assert self.state == TaskState.RUNNING
+        elapsed = max(0.0, now - self.started_at)
+        raw = self.done_base + elapsed * self.speed
+        if raw >= self.total_base - 1e-9:
+            raw = self.total_base  # finished exactly at preemption
+        else:
+            raw = math.floor(raw / self.cp_period_base) * self.cp_period_base
+        self.done_base = min(raw, self.total_base)
+        self.state = TaskState.PENDING
+        self.vm_uid = -1
+        self.epoch += 1
+
+
+@dataclasses.dataclass
+class VMRuntime:
+    """One VM instance with lifecycle, billing, credits and core occupancy."""
+
+    vm: VMInstance
+    cfg: CloudConfig
+    state: VMState = VMState.NOT_LAUNCHED
+    launched_at: float = -1.0
+    boot_done: float = -1.0
+    terminated_at: float = -1.0
+    running: dict[int, TaskRun] = dataclasses.field(default_factory=dict)  # core -> task
+    queue: list[TaskRun] = dataclasses.field(default_factory=list)
+    cost: float = 0.0
+    _bill_from: float = -1.0
+    credits: float = 0.0
+    _credits_at: float = -1.0
+    reserved_credits: float = 0.0
+    ac_index: int = 0
+    n_hibernations: int = 0
+    frozen: list[TaskRun] = dataclasses.field(default_factory=list)
+
+    # ---- billing -----------------------------------------------------
+    def accrue(self, now: float) -> None:
+        """Advance billing and credit accrual to ``now``."""
+        if self._bill_from >= 0.0 and self.state in (VMState.BUSY, VMState.IDLE):
+            dt = max(0.0, now - self._bill_from)
+            self.cost += dt * self.vm.price_per_sec
+            self._bill_from = now
+        if self.vm.is_burstable and self._credits_at >= 0.0 and \
+                self.state in (VMState.BUSY, VMState.IDLE):
+            dt = max(0.0, now - self._credits_at)
+            earn = self.vm.vm_type.credit_rate_per_hour / 3600.0 * dt
+            spend = dt / self.cfg.burst_period_s * sum(
+                1 for t in self.running.values() if t.mode == ExecMode.FULL)
+            cap = self.vm.vm_type.credit_rate_per_hour * 24.0
+            self.credits = min(cap, max(0.0, self.credits + earn - spend))
+            self._credits_at = now
+
+    # ---- lifecycle ---------------------------------------------------
+    def launch(self, now: float) -> float:
+        assert self.state == VMState.NOT_LAUNCHED
+        self.state = VMState.LAUNCHING
+        self.launched_at = now
+        self.boot_done = now + self.cfg.boot_overhead_s
+        return self.boot_done
+
+    def on_boot_done(self, now: float) -> None:
+        assert self.state == VMState.LAUNCHING
+        self.state = VMState.IDLE
+        self._bill_from = now          # charged after ω (paper §III-A)
+        self._credits_at = now
+        self.credits = self.vm.vm_type.initial_credits
+        self.ac_index = 0
+
+    def next_ac_boundary(self, now: float) -> float:
+        """Start of the next Allocation Cycle after ``now``."""
+        ac = self.cfg.allocation_cycle_s
+        k = max(1, math.ceil((now - self.boot_done) / ac + 1e-12))
+        return self.boot_done + k * ac
+
+    def terminate(self, now: float) -> None:
+        self.accrue(now)
+        self.state = VMState.TERMINATED
+        self.terminated_at = now
+
+    def hibernate(self, now: float, freeze_in_place: bool = False
+                  ) -> list[TaskRun]:
+        """Freeze the VM.
+
+        ``freeze_in_place=False`` (Burst-HADS): unfinished tasks are rolled
+        back to their last checkpoint and returned for immediate migration.
+        ``freeze_in_place=True`` (HADS): EC2 hibernation preserves memory, so
+        running tasks keep their *exact* progress and stay attached to the VM
+        (``frozen``); an empty list is returned.
+        """
+        self.accrue(now)
+        self.state = VMState.HIBERNATED
+        self.n_hibernations += 1
+        affected: list[TaskRun] = []
+        for t in list(self.running.values()):
+            if freeze_in_place:
+                elapsed = max(0.0, now - t.started_at)
+                t.done_base = min(t.total_base, t.done_base + elapsed * t.speed)
+                t.state = TaskState.PENDING
+                t.epoch += 1
+                self.frozen.append(t)
+            else:
+                t.preempt(now)
+                affected.append(t)
+        self.running.clear()
+        for t in self.queue:
+            t.epoch += 1
+            t.state = TaskState.PENDING
+            if freeze_in_place:
+                self.frozen.append(t)
+            else:
+                t.vm_uid = -1
+                affected.append(t)
+        self.queue.clear()
+        return affected
+
+    def take_frozen(self) -> list[TaskRun]:
+        """Detach frozen tasks (deferred migration decided to move them)."""
+        out = self.frozen
+        for t in out:
+            t.vm_uid = -1
+            # migrating a frozen task loses exact progress: checkpoint floor
+            t.done_base = math.floor(t.done_base / t.cp_period_base) \
+                * t.cp_period_base
+        self.frozen = []
+        return out
+
+    def take_frozen_in_place(self) -> list[TaskRun]:
+        """Detach frozen tasks for re-dispatch on the *same* VM after resume:
+        EC2 hibernation preserved the memory, so exact progress is kept."""
+        out = self.frozen
+        self.frozen = []
+        return out
+
+    def resume(self, now: float) -> None:
+        assert self.state == VMState.HIBERNATED
+        self.state = VMState.IDLE
+        self._bill_from = now
+        self._credits_at = now
+
+    # ---- occupancy ---------------------------------------------------
+    @property
+    def is_active(self) -> bool:
+        return self.state in (VMState.BUSY, VMState.IDLE)
+
+    def free_cores(self) -> list[int]:
+        return [k for k in range(self.vm.vcpus) if k not in self.running]
+
+    def running_mem_mb(self) -> float:
+        return sum(t.spec.memory_mb for t in self.running.values())
+
+    def can_dispatch(self, task: TaskRun) -> bool:
+        return (bool(self.free_cores())
+                and self.running_mem_mb() + task.spec.memory_mb
+                <= self.vm.memory_mb + 1e-9)
+
+    def dispatch(self, task: TaskRun, now: float, mode: ExecMode) -> float:
+        """Start the task on a free core; returns expected completion time."""
+        assert self.can_dispatch(task), f"dispatch on full VM {self.vm.name}"
+        self.accrue(now)
+        core = self.free_cores()[0]
+        task.state = TaskState.RUNNING
+        task.vm_uid = self.vm.uid
+        task.mode = mode
+        task.speed = task.exec_speed(self.vm, self.cfg, mode)
+        restore = self.cfg.checkpoint_restore_s if task.has_checkpoint else 0.0
+        task.started_at = now + restore
+        task.expected_end = task.started_at + task.remaining_base() / task.speed
+        task.epoch += 1
+        self.running[core] = task
+        self.state = VMState.BUSY
+        return task.expected_end
+
+    def complete(self, task: TaskRun, now: float) -> None:
+        self.accrue(now)
+        for core, t in list(self.running.items()):
+            if t is task:
+                del self.running[core]
+                break
+        task.state = TaskState.DONE
+        task.done_base = task.total_base
+        task.finished_at = now
+        task.vm_uid = self.vm.uid
+        if not self.running and not self.queue:
+            self.state = VMState.IDLE
+
+    # ---- estimation (check_migration support) -------------------------
+    def estimate_ready_times(self, now: float) -> list[float]:
+        """Per-core availability after running + queued commitments."""
+        base = self.boot_done if self.state == VMState.LAUNCHING else now
+        cores = [base] * self.vm.vcpus
+        for k, t in self.running.items():
+            cores[k % self.vm.vcpus] = max(cores[k % self.vm.vcpus],
+                                           t.expected_end)
+        pending = sorted(self.queue, key=lambda t: -t.remaining_base())
+        for t in pending:
+            i = min(range(len(cores)), key=cores.__getitem__)
+            cores[i] += t.run_time_on(self.vm, self.cfg, ExecMode.FULL,
+                                      self.cfg.checkpoint_restore_s)
+        return cores
+
+    def estimate_completion(self, task: TaskRun, now: float,
+                            mode: ExecMode) -> float:
+        cores = self.estimate_ready_times(now)
+        start = min(cores)
+        return start + task.run_time_on(self.vm, self.cfg, mode,
+                                        self.cfg.checkpoint_restore_s)
+
+    def longest_committed_exec(self) -> float:
+        """Longest full execution among tasks committed to this VM (spare-time
+        rule input, §III-E)."""
+        tasks = list(self.running.values()) + list(self.queue)
+        if not tasks:
+            return 0.0
+        return max(t.spec.exec_time(self.vm.vm_type, self.cfg.gflops_ref)
+                   for t in tasks)
+
+
+@dataclasses.dataclass
+class Cluster:
+    """All VM runtimes + the task set; the dynamic module's working state."""
+
+    cfg: CloudConfig
+    vms: dict[int, VMRuntime]
+    tasks: dict[int, TaskRun]
+
+    def by_state(self, *states: VMState) -> list[VMRuntime]:
+        return [v for v in self.vms.values() if v.state in states]
+
+    @property
+    def idle(self) -> list[VMRuntime]:
+        return self.by_state(VMState.IDLE)
+
+    @property
+    def busy(self) -> list[VMRuntime]:
+        return self.by_state(VMState.BUSY)
+
+    @property
+    def hibernated(self) -> list[VMRuntime]:
+        return self.by_state(VMState.HIBERNATED)
+
+    def unlaunched(self, market: Market) -> list[VMRuntime]:
+        return [v for v in self.vms.values()
+                if v.state == VMState.NOT_LAUNCHED and v.vm.market == market]
+
+    def unfinished(self) -> list[TaskRun]:
+        return [t for t in self.tasks.values() if t.state != TaskState.DONE]
+
+    def total_cost(self, now: float) -> float:
+        for v in self.vms.values():
+            v.accrue(now)
+        return sum(v.cost for v in self.vms.values())

@@ -1,0 +1,45 @@
+"""Algorithm 5 — Burst Work-Stealing Procedure.
+
+Triggered when a hibernated spot VM resumes or when a VM becomes idle (at
+the start of its next Allocation Cycle).  Steals *queued* (not-yet-started)
+tasks from busy non-burstable VMs — on-demand victims first, so regular
+on-demand VMs can drain and terminate early.  A burstable thief receives at
+most one task, in baseline mode, to avoid queuing behind the CPU cap.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+from .migration import check_migration
+from .runtime import TaskRun, VMRuntime, VMState
+from .types import ExecMode
+
+if TYPE_CHECKING:
+    from .migration import Engine
+
+
+def burst_work_steal(engine: "Engine", thief: VMRuntime, now: float) -> int:
+    """Returns the number of stolen tasks (0 = thief stays idle)."""
+    if thief.state != VMState.IDLE:
+        return 0
+    cluster, cfg, deadline = engine.cluster, engine.cfg, engine.deadline
+    stolen = 0
+
+    victims = sorted((v for v in cluster.busy
+                      if not v.vm.is_burstable and v is not thief),
+                     key=lambda v: (v.vm.is_spot, v.vm.uid))  # on-demand first
+    for victim in victims:
+        for task in list(victim.queue):
+            mode = ExecMode.BASELINE if thief.vm.is_burstable else ExecMode.FULL
+            if not check_migration(task, thief, now, deadline, cfg, mode):
+                continue
+            victim.queue.remove(task)
+            task.epoch += 1
+            if not victim.running and not victim.queue:
+                victim.state = VMState.IDLE
+            engine.assign(thief, task, now, mode)
+            engine.count("steals")
+            stolen += 1
+            if thief.vm.is_burstable:
+                return stolen      # exactly one task in baseline mode
+    return stolen

@@ -1,0 +1,1 @@
+from .checkpoint import CheckpointManager, ovh_checkpoint_period  # noqa: F401

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: blocked causal flash attention (online softmax).
+
+TPU-native tiling: q tiles of [qb, hd] live in VMEM per grid step; the
+kernel walks kv tiles with ``fori_loop``, maintaining the online-softmax
+running max / normaliser / accumulator in registers.  The MXU executes the
+two [qb, kb] x [kb, hd] matmuls per tile; hd and tile sizes are multiples
+of 128 for MXU alignment.  Causal + sliding-window masking is computed from
+position arithmetic (no [S, S] mask tensor).
+
+Grid: (BH, S / qb).  K/V for one (batch*head) row are staged whole into
+VMEM — bound: S * hd * 2 bytes * 2 <= ~16 MB, i.e. S <= 32k at hd=128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, kb: int, window: int):
+    qb = q_ref.shape[1]
+    hd = q_ref.shape[2]
+    s = k_ref.shape[1]
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * (hd ** -0.5)          # [qb, hd]
+    q_pos = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0)
+
+    n_kv = s // kb
+
+    def body(j, carry):
+        acc, m_i, l_i = carry
+        k = k_ref[0, pl.ds(j * kb, kb), :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(j * kb, kb), :].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # [qb, kb]
+        k_pos = j * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+        mask = k_pos <= q_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_new = jnp.maximum(m_i, jnp.max(logits, axis=1))    # [qb]
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(logits - m_new[:, None])                 # [qb, kb]
+        l_new = l_i * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((qb, hd), jnp.float32)
+    m0 = jnp.full((qb,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((qb,), jnp.float32)
+    # only kv tiles up to (and including) this q tile's diagonal matter;
+    # sliding windows additionally bound the loop from below (band-limited)
+    n_needed = jnp.minimum((qi + 1) * qb // kb + (1 if qb % kb else 0),
+                           n_kv)
+    j0 = jnp.maximum(0, (qi * qb - window + 1) // kb) if window > 0 else 0
+    acc, m_i, l_i = jax.lax.fori_loop(j0, n_needed, body, (acc0, m0, l0))
+    o_ref[0] = (acc / jnp.maximum(l_i, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("qb", "kb", "window", "interpret"))
+def flash_attention_bh(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       qb: int = 128, kb: int = 128, window: int = 0,
+                       interpret: bool = False) -> jax.Array:
+    """q/k/v: [BH, S, hd] (S divisible by qb and kb) -> [BH, S, hd]."""
+    bh, s, hd = q.shape
+    assert s % qb == 0 and s % kb == 0, (s, qb, kb)
+    grid = (bh, s // qb)
+    return pl.pallas_call(
+        functools.partial(_kernel, kb=kb, window=window),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, qb, hd), lambda b, i: (b, i, 0)),
+                  pl.BlockSpec((1, s, hd), lambda b, i: (b, 0, 0)),
+                  pl.BlockSpec((1, s, hd), lambda b, i: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, qb, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

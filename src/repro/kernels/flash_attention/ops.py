@@ -1,0 +1,36 @@
+"""jit'd wrapper: [B, S, H, hd] layout + GQA head repeat + padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bh
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("qb", "kb", "window", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    qb: int = 128, kb: int = 128, window: int = 0,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B, S, H, hd]; k/v: [B, S, Hkv, hd] (GQA) -> [B, S, H, hd]."""
+    b, s, h, hd = q.shape
+    hk = k.shape[2]
+    if hk != h:
+        rep = h // hk
+        k = jnp.broadcast_to(k[:, :, :, None], (b, s, hk, rep, hd)
+                             ).reshape(b, s, h, hd)
+        v = jnp.broadcast_to(v[:, :, :, None], (b, s, hk, rep, hd)
+                             ).reshape(b, s, h, hd)
+    s_pad = ((s + qb - 1) // qb) * qb
+    pad = s_pad - s
+
+    def to_bh(x):
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x.transpose(0, 2, 1, 3).reshape(b * h, s_pad, hd)
+
+    o = flash_attention_bh(to_bh(q), to_bh(k), to_bh(v), qb=qb, kb=kb,
+                           window=window, interpret=interpret)
+    o = o.reshape(b, h, s_pad, hd).transpose(0, 2, 1, 3)
+    return o[:, :s]

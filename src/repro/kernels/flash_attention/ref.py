@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: causal (optionally sliding-window) softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  window: int = 0) -> jax.Array:
+    """q/k/v: [BH, S, hd] -> [BH, S, hd]; causal; fp32 softmax."""
+    s = q.shape[1]
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqd,bkd->bqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    qi = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    mask = ki <= qi
+    if window > 0:
+        mask &= (qi - ki) < window
+    logits = jnp.where(mask[None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", probs.astype(v.dtype), v)

@@ -1,0 +1,32 @@
+"""jit'd wrapper: [B, T, H, hd] layout, per-head u, padding to chunk size."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .rwkv6 import wkv6_chunked
+
+
+@functools.partial(jax.jit, static_argnames=("cs", "interpret"))
+def wkv6(r, k, v, w, u, *, cs: int = 32, interpret: bool = False):
+    """r/k/v/w: [B, T, H, hd]; u: [H, hd].
+
+    Returns (y [B, T, H, hd] fp32, final state [B, H, hd, hd])."""
+    b, t, h, hd = r.shape
+    t_pad = ((t + cs - 1) // cs) * cs
+
+    def to_bh(x, pad_value=0.0):
+        x = jnp.pad(x, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)),
+                    constant_values=pad_value)
+        return x.transpose(0, 2, 1, 3).reshape(b * h, t_pad, hd)
+
+    # pad decay with w=1 so padded steps leave the state untouched
+    rs, ks, vs = to_bh(r), to_bh(k), to_bh(v)
+    ws = to_bh(w, pad_value=1.0)
+    u_bh = jnp.tile(u.astype(jnp.float32), (b, 1))           # [B*H, hd]
+
+    y, state = wkv6_chunked(rs, ks, vs, ws, u_bh, cs=cs, interpret=interpret)
+    y = y.reshape(b, h, t_pad, hd)[:, :, :t]
+    return y.transpose(0, 2, 1, 3), state.reshape(b, h, hd, hd)

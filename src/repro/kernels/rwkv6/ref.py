@@ -1,0 +1,30 @@
+"""Pure-jnp oracle: sequential RWKV-6 WKV recurrence (per head).
+
+y_t = r_t (S_t + diag(u) k_t v_t^T);   S_{t+1} = diag(w_t) S_t + k_t v_t^T
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, state: jax.Array | None = None):
+    """r/k/v/w: [BH, T, hd]; u: [hd]; state: [BH, hd, hd] (k-major).
+
+    Returns (y [BH, T, hd], final state)."""
+    bh, t, hd = r.shape
+    if state is None:
+        state = jnp.zeros((bh, hd, hd), jnp.float32)
+
+    def step(s, inp):
+        r_, k_, v_, w_ = inp
+        kv = k_[:, :, None] * v_[:, None, :]                 # [BH, hd, hd]
+        y = jnp.einsum("bk,bkv->bv", r_, s + u[None, :, None] * kv)
+        s = w_[:, :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (r, k, v, w))
+    state, y = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(y, 0, 1), state

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: chunked RWKV-6 WKV recurrence.
+
+Hardware adaptation (DESIGN.md §2): the GPU reference implementations walk
+tokens serially per thread; on TPU we block the time axis into chunks of
+``cs`` tokens so the intra-chunk contribution becomes two MXU matmuls with
+a per-channel cumulative-decay rescaling, while the [hd, hd] state carries
+across chunks in a VMEM scratch accumulator:
+
+  cum_t     = prod_{u<=t} w_u                        (per channel, in-chunk)
+  inter_t   = (r_t * cum_t / w_t^0...) @ S            -- state contribution
+  score[t,s]= sum_c r[t,c] k[s,c] cum[t,c]/cum[s,c]   (s < t, strictly)
+  diag term = (r_t . k_t) * u                        (s == t bonus)
+  S'        = diag(cum_last) S + ((cum_last/cum) * k)^T V
+
+Numerical note: 1/cum grows within a chunk; fp32 state with cs <= 64 keeps
+the dynamic range safe for decays w >= ~0.6 (RWKV-6's effective range).
+
+Grid: (BH, T / cs) — time is the sequential minor grid dim; the scratch
+state persists across chunk steps and re-initialises at chunk 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sout_ref, state_ref,
+            *, cs: int):
+    c = pl.program_id(1)
+    n_chunks = pl.num_programs(1)
+    hd = r_ref.shape[2]
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0].astype(jnp.float32)        # [cs, hd]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)        # [hd]
+    s = state_ref[...]                      # [hd, hd]
+
+    cum = jnp.cumprod(w, axis=0)            # [cs, hd]; cum[t] = prod w_0..t
+    # state (inter-chunk) readout: S holds everything before this chunk;
+    # decay from chunk start to t is cum[t] / w[0] * w[0] = prod w_0..t?
+    # Recurrence: y_t reads S_t = decay(0..t-1 within chunk) applied to S.
+    dec_in = cum / w                        # prod w_0..t-1 (w_0.. exclusive)
+    y = (r * dec_in) @ s                    # [cs, hd]
+
+    # intra-chunk, strictly lower triangular
+    ti = jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 1)
+    rq = r * dec_in                         # r_t * prod w_{0..t-1}
+    kq = k / cum                            # k_s / prod w_{0..s}
+    score = jax.lax.dot_general(rq, kq, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    score = jnp.where(si < ti, score, 0.0)  # strict causal
+    y += score @ v
+    # diagonal bonus
+    y += jnp.sum(r * u[None] * k, axis=1, keepdims=True) * v
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update to end of chunk
+    cum_last = cum[-1]                      # [hd]
+    k_scaled = k * (cum_last / cum)         # prod w_{s+1..last}
+    s_new = s * cum_last[:, None] + jax.lax.dot_general(
+        k_scaled, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    state_ref[...] = s_new
+
+    @pl.when(c == n_chunks - 1)
+    def _emit():
+        sout_ref[0] = s_new
+
+
+@functools.partial(jax.jit, static_argnames=("cs", "interpret"))
+def wkv6_chunked(r, k, v, w, u, *, cs: int = 32, interpret: bool = False):
+    """r/k/v/w: [BH, T, hd] (T divisible by cs); u: [BH, hd] (per row).
+
+    Returns (y [BH, T, hd] fp32, final state [BH, hd, hd] fp32)."""
+    bh, t, hd = r.shape
+    assert t % cs == 0, (t, cs)
+    u2 = u.astype(jnp.float32)
+    grid = (bh, t // cs)
+    y, sout = pl.pallas_call(
+        functools.partial(_kernel, cs=cs),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, cs, hd), lambda b, c: (b, c, 0)),
+                  pl.BlockSpec((1, cs, hd), lambda b, c: (b, c, 0)),
+                  pl.BlockSpec((1, cs, hd), lambda b, c: (b, c, 0)),
+                  pl.BlockSpec((1, cs, hd), lambda b, c: (b, c, 0)),
+                  pl.BlockSpec((1, hd), lambda b, c: (b, 0))],
+        out_specs=[pl.BlockSpec((1, cs, hd), lambda b, c: (b, c, 0)),
+                   pl.BlockSpec((1, hd, hd), lambda b, c: (b, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((bh, t, hd), jnp.float32),
+                   jax.ShapeDtypeStruct((bh, hd, hd), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u2)
+    return y, sout

@@ -1,0 +1,2 @@
+from .ops import population_fitness  # noqa: F401
+from .ref import population_fitness_ref  # noqa: F401

@@ -1,0 +1,36 @@
+"""jit'd wrapper: Pallas reductions + jnp fitness finalisation."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .sched_fitness import population_reduce
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def population_fitness(alloc, e, rm, vm_cores, vm_mem, vm_price, vm_is_spot,
+                       *, dspot, deadline, alpha, cost_scale, boot_s,
+                       interpret: bool = True):
+    """Fitness of P candidate schedules (Eq. 8, LPT makespan bound).
+
+    ``interpret=True`` executes the Pallas body in Python — the CPU
+    validation mode; on TPU pass ``interpret=False``.
+    Returns (fitness [P], cost [P], makespan [P]).
+    """
+    loads, maxe, cnt, maxmem = population_reduce(alloc, e, rm,
+                                                 interpret=interpret)
+    busy = cnt > 0
+    makespan = jnp.where(
+        busy, jnp.maximum(loads / vm_cores[None], maxe) + boot_s, 0.0)
+    mem_peak = maxmem * jnp.minimum(cnt, vm_cores[None])
+    mem_bad = jnp.any(mem_peak > vm_mem[None] + 1e-6, axis=1)
+    limit = jnp.where(vm_is_spot[None] > 0, dspot, deadline)
+    time_bad = jnp.any(makespan > limit + 1e-6, axis=1)
+    cost = jnp.sum(vm_price[None] * jnp.maximum(makespan - boot_s, 0.0),
+                   axis=1)
+    mkp = jnp.max(makespan, axis=1)
+    fit = alpha * cost / cost_scale + (1 - alpha) * mkp / deadline
+    bad = mem_bad | time_bad
+    return jnp.where(bad, jnp.inf, fit), cost, mkp

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the population-fitness kernel.
+
+Given P candidate allocation vectors, compute per-(solution, VM) reductions:
+  loads[p, v]  = sum of exec times of tasks assigned to v
+  maxe[p, v]   = longest single task on v
+  cnt[p, v]    = number of tasks on v
+  maxmem[p, v] = largest task memory on v
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def population_reduce_ref(alloc: jax.Array, e: jax.Array, rm: jax.Array
+                          ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                     jax.Array]:
+    """alloc: int32 [P, B]; e: f32 [B, V]; rm: f32 [B]."""
+    p, b = alloc.shape
+    v = e.shape[1]
+    onehot = jax.nn.one_hot(alloc, v, dtype=e.dtype)         # [P, B, V]
+    loads = jnp.einsum("pbv,bv->pv", onehot, e)
+    cnt = onehot.sum(axis=1)
+    maxe = jnp.max(jnp.where(onehot > 0, e[None], 0.0), axis=1)
+    maxmem = jnp.max(jnp.where(onehot > 0, rm[None, :, None], 0.0), axis=1)
+    return loads, maxe, cnt, maxmem
+
+
+def population_fitness_ref(alloc, e, rm, vm_cores, vm_mem, vm_price,
+                           vm_is_spot, *, dspot, deadline, alpha, cost_scale,
+                           boot_s):
+    """Full fitness (Eq. 8 with the LPT makespan bound) — jnp reference."""
+    loads, maxe, cnt, maxmem = population_reduce_ref(alloc, e, rm)
+    busy = cnt > 0
+    makespan = jnp.where(
+        busy, jnp.maximum(loads / vm_cores[None], maxe) + boot_s, 0.0)
+    mem_peak = maxmem * jnp.minimum(cnt, vm_cores[None])
+    mem_bad = jnp.any(mem_peak > vm_mem[None] + 1e-6, axis=1)
+    limit = jnp.where(vm_is_spot[None] > 0, dspot, deadline)
+    time_bad = jnp.any(makespan > limit + 1e-6, axis=1)
+    cost = jnp.sum(vm_price[None] * jnp.maximum(makespan - boot_s, 0.0),
+                   axis=1)
+    mkp = jnp.max(makespan, axis=1)
+    fit = alpha * cost / cost_scale + (1 - alpha) * mkp / deadline
+    bad = mem_bad | time_bad
+    return jnp.where(bad, jnp.inf, fit), cost, mkp

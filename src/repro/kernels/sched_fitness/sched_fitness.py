@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: population scheduling-fitness reductions.
+
+The ILS hot-spot is evaluating thousands of candidate allocation vectors per
+step (DESIGN.md §2.1).  The MXU is useless here (integer compare/select
+reductions), so the kernel targets the VPU: one [pb, V] accumulator set in
+VMEM per population tile, streaming task tiles; the VM axis (padded to the
+128-lane register width) is the minor dimension.
+
+Grid: (P / pb, B / tb) — the task axis is the *sequential* minor grid dim so
+output tiles are revisited and accumulated in place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128   # TPU vector lane width; V is padded to this
+
+
+def _kernel(alloc_ref, e_ref, rm_ref, loads_ref, maxe_ref, cnt_ref,
+            maxmem_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        loads_ref[...] = jnp.zeros_like(loads_ref)
+        maxe_ref[...] = jnp.zeros_like(maxe_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        maxmem_ref[...] = jnp.zeros_like(maxmem_ref)
+
+    alloc = alloc_ref[...]                                  # [pb, tb] int32
+    e = e_ref[...]                                          # [tb, V]
+    rm = rm_ref[...]                                        # [tb, 1]
+    v_ids = jax.lax.broadcasted_iota(jnp.int32, (1, 1, e.shape[1]), 2)
+    onehot = (alloc[:, :, None] == v_ids).astype(e.dtype)   # [pb, tb, V]
+
+    loads_ref[...] += jnp.sum(onehot * e[None], axis=1)
+    cnt_ref[...] += jnp.sum(onehot, axis=1)
+    maxe_ref[...] = jnp.maximum(
+        maxe_ref[...], jnp.max(onehot * e[None], axis=1))
+    maxmem_ref[...] = jnp.maximum(
+        maxmem_ref[...], jnp.max(onehot * rm[None], axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("pb", "tb", "interpret"))
+def population_reduce(alloc: jax.Array, e: jax.Array, rm: jax.Array,
+                      *, pb: int = 8, tb: int = 128,
+                      interpret: bool = False):
+    """alloc int32 [P, B]; e f32 [B, V]; rm f32 [B] ->
+    (loads, maxe, cnt, maxmem) each f32 [P, V]."""
+    p, b = alloc.shape
+    v = e.shape[1]
+    # pad: V to LANE (mapping padded tasks to a padded VM column), B to tb,
+    # P to pb
+    v_pad = max(LANE, ((v + LANE - 1) // LANE) * LANE)
+    b_pad = ((b + tb - 1) // tb) * tb
+    p_pad = ((p + pb - 1) // pb) * pb
+    alloc = jnp.pad(alloc, ((0, p_pad - p), (0, b_pad - b)),
+                    constant_values=v_pad - 1)   # padded tasks -> pad VM
+    e = jnp.pad(e.astype(jnp.float32), ((0, b_pad - b), (0, v_pad - v)))
+    rm = jnp.pad(rm.astype(jnp.float32), (0, b_pad - b))[:, None]
+
+    grid = (p_pad // pb, b_pad // tb)
+    out_shape = [jax.ShapeDtypeStruct((p_pad, v_pad), jnp.float32)
+                 for _ in range(4)]
+    out_spec = pl.BlockSpec((pb, v_pad), lambda i, j: (i, 0))
+    loads, maxe, cnt, maxmem = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((pb, tb), lambda i, j: (i, j)),
+                  pl.BlockSpec((tb, v_pad), lambda i, j: (j, 0)),
+                  pl.BlockSpec((tb, 1), lambda i, j: (j, 0))],
+        out_specs=[out_spec] * 4,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(alloc, e, rm)
+    return (loads[:p, :v], maxe[:p, :v], cnt[:p, :v], maxmem[:p, :v])

@@ -1,0 +1,2 @@
+# NOTE: deliberately empty — launch modules set XLA_FLAGS before importing
+# jax; nothing here may import jax.

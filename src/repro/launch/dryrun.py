@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  * ``jax.jit(step, in_shardings, out_shardings).lower(...).compile()`` on
+    the production mesh — compile success proves the distribution config is
+    coherent; ``memory_analysis()`` proves it fits; ``cost_analysis()``
+    feeds the roofline;
+  * a one-layer probe at identical shardings recovers per-layer costs
+    (XLA counts scan bodies once — measured), composed as
+    ``total = full + (L-1) x probe``;
+  * collective bytes parsed from the post-SPMD HLO text.
+
+Results are cached as JSON under --out (default results/dryrun) so the
+roofline/benchmark layers never need to recompile.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch all
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --probe none
+"""
+import argparse      # noqa: E402
+import gc            # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCHS, get_config                 # noqa: E402
+from repro.configs.shapes import cells_for, skipped_for     # noqa: E402
+from repro.launch.hlo_analysis import parse_collectives     # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.launch.specs import make_cell                    # noqa: E402
+
+
+def _cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def _mem_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    return {k: int(getattr(ma, k, 0)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes",
+             "alias_size_in_bytes")}
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             with_probe: bool) -> dict:
+    t0 = time.time()
+    cell = make_cell(arch, shape_name, mesh)
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_devices": mesh.devices.size, "kind": cell.shape.kind,
+        "seq_len": cell.shape.seq_len, "global_batch": cell.shape.global_batch,
+        "n_layers": cell.n_layers, "n_params": cell.n_params,
+        "n_active": cell.n_active, "model_flops": cell.model_flops,
+    }
+    with mesh:
+        lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                          out_shardings=cell.out_shardings,
+                          donate_argnums=cell.donate).lower(*cell.args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        rec["full"] = {"cost": _cost_dict(compiled),
+                       "memory": _mem_dict(compiled),
+                       "collectives": parse_collectives(
+                           compiled.as_text()).to_json(),
+                       "lower_s": t1 - t0, "compile_s": t2 - t1}
+        del compiled, lowered
+        gc.collect()
+
+        if with_probe and cell.probe_fn is not None:
+            t3 = time.time()
+            pl = jax.jit(cell.probe_fn,
+                         in_shardings=cell.probe_in_shardings
+                         ).lower(*cell.probe_args)
+            pc = pl.compile()
+            rec["probe"] = {"cost": _cost_dict(pc),
+                            "collectives": parse_collectives(
+                                pc.as_text()).to_json(),
+                            "compile_s": time.time() - t3}
+            del pc, pl
+            gc.collect()
+
+            L = cell.n_layers
+            nd = mesh.devices.size
+            f, p = rec["full"], rec["probe"]
+            rec["total"] = {
+                "flops": f["cost"]["flops"] + (L - 1) * p["cost"]["flops"]
+                + cell.flop_correction / nd,
+                "bytes": f["cost"]["bytes"] + (L - 1) * p["cost"]["bytes"]
+                + cell.bytes_correction / nd,
+                "collective_operand_bytes":
+                    f["collectives"]["operand_bytes"] +
+                    (L - 1) * p["collectives"]["operand_bytes"],
+                "collective_wire_bytes":
+                    f["collectives"]["wire_bytes"] +
+                    (L - 1) * p["collectives"]["wire_bytes"],
+            }
+            rec["corrections"] = {"flops_global": cell.flop_correction,
+                                  "bytes_global": cell.bytes_correction}
+    rec["elapsed_s"] = time.time() - t0
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=("single", "multi",
+                                                         "both"))
+    ap.add_argument("--probe", default="auto", choices=("auto", "none"))
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    help="ModelConfig overrides for optimized variants, "
+                         "e.g. --set seq_parallel=True")
+    args = ap.parse_args()
+
+    if args.overrides:
+        import dataclasses
+        import repro.launch.specs as specs
+        base_get = specs.get_config
+        kv = {}
+        for item in args.overrides:
+            k, v = item.split("=", 1)
+            kv[k] = {"True": True, "False": False}.get(v, v)
+
+        def patched(name, tiny=False):
+            cfg = base_get(name, tiny)
+            usable = {k: v for k, v in kv.items()
+                      if not (k == "seq_parallel" and cfg.mixer == "rwkv6")}
+            return dataclasses.replace(cfg, **usable)
+
+        specs.get_config = patched
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_fail = n_skip = 0
+    for multi in meshes:
+        mesh_name = "pod2x16x16" if multi else "pod16x16"
+        mesh = make_production_mesh(multi_pod=multi)
+        # probes are for the single-pod roofline; multi-pod proves sharding
+        with_probe = (args.probe == "auto") and not multi
+        for arch in archs:
+            cfg = get_config(arch)
+            shapes = [s.name for s in cells_for(cfg)] \
+                if args.shape == "all" else [args.shape]
+            for sk, why in skipped_for(cfg):
+                print(f"SKIP  {mesh_name} {arch} {sk}: {why}", flush=True)
+            for shape_name in shapes:
+                path = os.path.join(
+                    args.out, f"{mesh_name}__{arch}__{shape_name}.json")
+                if os.path.exists(path) and not args.force:
+                    print(f"CACHED {mesh_name} {arch} {shape_name}",
+                          flush=True)
+                    n_ok += 1
+                    continue
+                try:
+                    rec = run_cell(arch, shape_name, mesh, mesh_name,
+                                   with_probe)
+                    with open(path, "w") as fh:
+                        json.dump(rec, fh, indent=1)
+                    mem = rec["full"]["memory"]
+                    per_dev = (mem["argument_size_in_bytes"] +
+                               mem["temp_size_in_bytes"]) / 2**30
+                    print(f"OK    {mesh_name} {arch} {shape_name} "
+                          f"compile={rec['full']['compile_s']:.1f}s "
+                          f"mem/dev={per_dev:.2f}GiB", flush=True)
+                    n_ok += 1
+                except Exception:
+                    n_fail += 1
+                    err = traceback.format_exc()
+                    with open(path + ".FAIL", "w") as fh:
+                        fh.write(err)
+                    print(f"FAIL  {mesh_name} {arch} {shape_name}\n"
+                          f"{err.splitlines()[-1]}", flush=True)
+                gc.collect()
+    print(f"dry-run done: ok={n_ok} fail={n_fail}", flush=True)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

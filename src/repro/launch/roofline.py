@@ -1,0 +1,139 @@
+"""Roofline analysis over the dry-run artifacts (TPU v5e targets).
+
+Terms (per the assignment, all in seconds per step):
+  compute    = HLO_FLOPs / (chips * 197 TFLOP/s bf16)
+  memory     = HLO_bytes / (chips * 819 GB/s HBM)
+  collective = collective_bytes / (chips * 50 GB/s ICI per link)
+
+HLO_FLOPs / bytes are per-device from ``compiled.cost_analysis()`` composed
+over scanned layers (dryrun.py); collective bytes are the HLO operand-byte
+sums; MODEL_FLOPS is 6*N_active*D for train cells and 2*N_active*D for
+inference cells.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline --dir results/dryrun \
+      [--mesh pod16x16] [--csv results/roofline.csv]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if "total" not in rec:
+        return None
+    nd = rec["n_devices"]
+    t = rec["total"]
+    flops_dev = t["flops"]
+    bytes_dev = t["bytes"]
+    coll_dev = t["collective_operand_bytes"]     # per-device operand bytes
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    # spec: collective_bytes(global) / (chips * link_bw) == per-device/link
+    collective_s = coll_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    model_ratio = rec["model_flops"] / max(1.0, flops_dev * nd)
+    mem = rec["full"]["memory"]
+    hbm_gib = (mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]) \
+        / 2**30
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"], "n_devices": nd,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "step_bound_s": bound,
+        "roofline_fraction": compute_s / bound if bound > 0 else 0.0,
+        "model_flops": rec["model_flops"],
+        "hlo_flops_global": flops_dev * nd,
+        "model_ratio": model_ratio,
+        "mfu_bound": rec["model_flops"] / (nd * PEAK_FLOPS * bound)
+        if bound > 0 else 0.0,
+        "hbm_gib": hbm_gib,
+        "coll_wire_dev": t.get("collective_wire_bytes", 0.0),
+    }
+
+
+def load_all(directory: str, mesh: str = "pod16x16") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(directory,
+                                              f"{mesh}__*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyze_record(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def advice(row: dict) -> str:
+    """One sentence: what would move the dominant term down."""
+    d = row["dominant"]
+    if d == "collective":
+        return ("reduce resharding: fewer all-gathers via better activation "
+                "constraints / larger per-collective payloads")
+    if d == "memory":
+        if row["kind"] == "decode":
+            return ("decode is KV/weight-bandwidth bound: quantize cache or "
+                    "batch more requests per step")
+        return ("increase arithmetic intensity: larger microbatch, fused "
+                "kernels, bf16 intermediates")
+    if row["model_ratio"] < 0.5:
+        return ("compute-bound but wasteful: cut remat recompute or padded "
+                "head/expert shards (MODEL/HLO ratio "
+                f"{row['model_ratio']:.2f})")
+    return "compute-bound and efficient: scale batch or accept"
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':<24}{'shape':<13}{'comp_s':>10}{'mem_s':>10}"
+           f"{'coll_s':>10}{'dom':>6}{'roof%':>7}{'MFUb%':>7}{'M/H':>6}"
+           f"{'HBM GiB':>9}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        out.append(
+            f"{r['arch']:<24}{r['shape']:<13}"
+            f"{r['compute_s']:>10.2e}{r['memory_s']:>10.2e}"
+            f"{r['collective_s']:>10.2e}"
+            f"{r['dominant'][:4]:>6}"
+            f"{100 * r['roofline_fraction']:>6.1f}%"
+            f"{100 * r['mfu_bound']:>6.1f}%"
+            f"{r['model_ratio']:>6.2f}"
+            f"{r['hbm_gib']:>9.2f}")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--csv", default="results/roofline.csv")
+    ap.add_argument("--advice", action="store_true")
+    args = ap.parse_args()
+
+    rows = load_all(args.dir, args.mesh)
+    print(fmt_table(rows))
+    if args.advice:
+        for r in rows:
+            print(f"{r['arch']} {r['shape']}: {advice(r)}")
+    if args.csv:
+        os.makedirs(os.path.dirname(args.csv) or ".", exist_ok=True)
+        keys = list(rows[0].keys()) if rows else []
+        with open(args.csv, "w") as f:
+            f.write(",".join(keys) + "\n")
+            for r in rows:
+                f.write(",".join(str(r[k]) for k in keys) + "\n")
+        print(f"\nwrote {args.csv} ({len(rows)} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Batched serving driver: prefill + decode loop with O(1)/KV state.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --scale tiny \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.train import scaled_config
+from repro.models.decode import init_cache
+from repro.models.model import init_params
+from repro.train.steps import make_serve_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--scale", default="tiny",
+                    choices=("tiny", "small", "100m"))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = scaled_config(args.arch, args.scale)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    serve = jax.jit(make_serve_step(cfg))
+    max_seq = args.prompt_len + args.gen
+    cache = init_cache(cfg, args.batch, max_seq, dtype=jnp.float32)
+
+    key = jax.random.PRNGKey(1)
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                cfg.vocab)
+    # prefill by stepping (exercises the same serve_step the dry-run lowers)
+    tok = prompt[:, 0]
+    t0 = time.time()
+    for i in range(1, args.prompt_len):
+        logits, cache = serve(params, cache, tok)
+        tok = prompt[:, i]
+    out = []
+    for i in range(args.gen):
+        logits, cache = serve(params, cache, tok)
+        if args.temperature > 0:
+            key, k2 = jax.random.split(key)
+            tok = jax.random.categorical(k2, logits / args.temperature)
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+        out.append(tok)
+    dt = time.time() - t0
+    toks = jnp.stack(out, axis=1)
+    total = args.batch * (args.prompt_len + args.gen - 1)
+    print(f"arch={cfg.name} batch={args.batch} "
+          f"steps={args.prompt_len + args.gen - 1} "
+          f"throughput={total / dt:.1f} tok/s")
+    print("generated:", toks[0][:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,318 @@
+"""Dry-run cell construction: abstract inputs + shardings per (arch, shape).
+
+For every cell we build TWO programs:
+  * the *full* step (train_step / prefill_step / serve_step) — compiled for
+    memory analysis and entry-level costs;
+  * the *layer probe* — one layer body at identical shardings, compiled to
+    recover per-layer flops/bytes/collectives, because XLA's cost analysis
+    counts a ``scan`` while-body exactly once (measured; see DESIGN.md).
+Totals compose as   total = full + (n_layers - 1) x probe.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.models.config import ModelConfig
+from repro.models.decode import cache_spec, make_decode_layer_fn
+from repro.models.model import (abstract_params, build_kinds, count_params,
+                                make_layer_fn, remat_policy)
+from repro.sharding.rules import DP_AXES, make_param_shardings
+from repro.train.optimizer import AdamWConfig, adamw_abstract
+from repro.train.steps import (make_prefill_step, make_serve_step,
+                               make_train_step)
+
+
+#: grad-accumulation depth for train_4k cells (bounds activation memory)
+TRAIN_MICROBATCHES = 8
+
+
+def _dp(mesh: Mesh, batch: int):
+    """DP axes tuple if the batch divides the DP extent, else replicate."""
+    axes = tuple(a for a in DP_AXES if a in mesh.axis_names)
+    size = math.prod(mesh.shape[a] for a in axes) if axes else 1
+    return axes if axes and batch % size == 0 else None
+
+
+def _ns(mesh: Mesh, *spec) -> NamedSharding:
+    spec = tuple(s if (s is None or isinstance(s, tuple) or
+                       s in mesh.axis_names) else None for s in spec)
+    return NamedSharding(mesh, P(*spec))
+
+
+def _fix_sharding(mesh: Mesh, sh: NamedSharding, aval) -> NamedSharding:
+    """Drop mesh axes whose extent does not divide the dim (XLA requires
+    *input* shardings to divide evenly; intermediates may be padded)."""
+    new = []
+    for dim, ax in enumerate(sh.spec):
+        if ax is None:
+            new.append(None)
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        ext = math.prod(mesh.shape[n] for n in names)
+        new.append(ax if aval.shape[dim] % ext == 0 else None)
+    return NamedSharding(mesh, P(*new))
+
+
+def fix_tree(mesh: Mesh, shardings, avals):
+    return jax.tree.map(lambda sh, av: _fix_sharding(mesh, sh, av),
+                        shardings, avals)
+
+
+def _cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int) -> dict:
+    dp = _dp(mesh, batch)
+    sh = {"index": _ns(mesh)}
+    if cfg.mixer in ("attention", "hymba"):
+        # kv heads rarely divide the model axis (GQA); fall back to
+        # context-parallel cache: shard the sequence dim over "model"
+        if cfg.n_kv_heads % mesh.shape.get("model", 1) == 0:
+            kv_spec = (None, dp, None, "model", None)
+        else:
+            kv_spec = (None, dp, "model", None, None)
+        sh["k"] = _ns(mesh, *kv_spec)
+        sh["v"] = _ns(mesh, *kv_spec)
+    if cfg.mixer == "hymba":
+        sh["ssm"] = _ns(mesh, None, dp, "model", None)
+        sh["conv"] = _ns(mesh, None, dp, None, "model")
+    if cfg.mixer == "rwkv6":
+        sh["wkv"] = _ns(mesh, None, dp, "model", None, None)
+        sh["x_tm"] = _ns(mesh, None, dp, None)
+    if cfg.ffn == "rwkv_cm":
+        sh["x_cm"] = _ns(mesh, None, dp, None)
+    return sh
+
+
+def _batch_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec,
+                 with_labels: bool):
+    dp = _dp(mesh, shape.global_batch)
+    b, s = shape.global_batch, shape.seq_len
+    args: dict[str, Any] = {}
+    shard: dict[str, Any] = {}
+    if cfg.input_mode == "embeds":
+        args["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                              jnp.bfloat16)
+        shard["embeds"] = _ns(mesh, dp, None, None)
+    else:
+        args["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        shard["tokens"] = _ns(mesh, dp, None)
+    if with_labels:
+        args["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        shard["labels"] = _ns(mesh, dp, None)
+    return args, shard
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    cfg: ModelConfig
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple
+    probe_fn: Callable | None
+    probe_args: tuple | None
+    probe_in_shardings: tuple | None
+    n_layers: int
+    model_flops: float          # analytic 6*N_active*D (train) / 2*N_active*D
+    n_params: int
+    n_active: int
+    flop_correction: float      # GLOBAL flops uncounted inside inner scans
+    bytes_correction: float     # GLOBAL bytes for the same
+
+
+#: chunk length the Pallas kernels hold recurrent state in VMEM for
+#: (kernels/rwkv6: cs=32); sets the HBM state-traffic model below
+KERNEL_CHUNK = 32
+
+
+def _inner_loop_corrections(cfg: ModelConfig, shape: ShapeSpec,
+                            kernelized: bool = True
+                            ) -> tuple[float, float]:
+    """Analytic flops/bytes executed by *inner* scan bodies beyond the first
+    iteration (XLA cost analysis counts loop bodies once — measured):
+
+      * blocked-attention q-tile loop (train/prefill, attention|hymba);
+      * RWKV wkv time scan; * Mamba selective-scan time scan.
+
+    ``kernelized=True`` models the shipped Pallas execution path
+    (EXPERIMENTS.md §Perf): the flash kernel visits only the causal kv
+    tiles (factor (n+1)/2n) and the chunked recurrence kernels keep state
+    in VMEM for KERNEL_CHUNK tokens (state HBM traffic / KERNEL_CHUNK).
+    ``kernelized=False`` models the naive jnp loops (full rectangle,
+    per-token state round-trips) — the paper-faithful baseline numbers.
+    Training multiplies by 4 (fwd + remat recompute + ~2x backward).
+    """
+    from repro.models.layers import BLOCKED_ATTN_THRESHOLD, Q_BLOCK
+    b, s, L = shape.global_batch, shape.seq_len, cfg.n_layers
+    mult = 4.0 if shape.kind == "train" else 1.0
+    flops = bytes_ = 0.0
+    if shape.kind in ("train", "prefill"):
+        if cfg.mixer in ("attention", "hymba") and s > BLOCKED_ATTN_THRESHOLD:
+            n_tiles = s // Q_BLOCK
+            per_layer_f = 4.0 * b * cfg.n_heads * cfg.d_head * s * s
+            per_layer_b = 2.0 * b * s * cfg.n_heads * cfg.d_head * 2  # K+V rd
+            if kernelized:
+                # causal fraction; sliding windows band-limit further
+                # (the flash kernel walks kv tiles in [q-W, q] only)
+                frac = (n_tiles + 1) / (2.0 * n_tiles)
+                if cfg.window > 0:
+                    frac = min(frac, (cfg.window + Q_BLOCK) / s)
+                flops += L * per_layer_f * (frac - 1.0 / n_tiles) * mult
+                bytes_ += L * per_layer_b * (n_tiles * frac - 1) * mult
+            else:
+                flops += L * per_layer_f * ((n_tiles - 1) / n_tiles) * mult
+                bytes_ += L * per_layer_b * (n_tiles - 1) * mult
+        state_div = KERNEL_CHUNK if kernelized else 1
+        if cfg.mixer == "rwkv6":
+            h, hd = cfg.rwkv_heads, cfg.rwkv_head_size
+            per_tok_f = 6.0 * h * hd * hd
+            per_tok_b = 2.0 * h * hd * hd * 4 / state_div
+            flops += L * b * (s - 1) * per_tok_f * mult
+            bytes_ += L * b * (s - 1) * per_tok_b * mult
+        if cfg.mixer == "hymba":
+            di, n = cfg.ssm_inner, cfg.ssm_state
+            per_tok_f = 8.0 * di * n
+            per_tok_b = 2.0 * di * n * 4 / state_div
+            flops += L * b * (s - 1) * per_tok_f * mult
+            bytes_ += L * b * (s - 1) * per_tok_b * mult
+    return flops, bytes_
+
+
+def make_cell(arch: str, shape_name: str, mesh: Mesh) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    kinds = build_kinds(cfg)
+    params = abstract_params(cfg)
+    p_shard = make_param_shardings(mesh, kinds, cfg.fsdp)
+    n_total, n_active = count_params(cfg)
+    tokens_total = shape.global_batch * shape.seq_len
+    dp = _dp(mesh, shape.global_batch)
+
+    if shape.kind == "train":
+        opt = adamw_abstract(params)
+        opt_shard = {"m": p_shard, "v": p_shard, "step": _ns(mesh)}
+        state = {"params": params, "opt": opt}
+        state_shard = {"params": p_shard, "opt": opt_shard}
+        batch, batch_shard = _batch_specs(cfg, mesh, shape, with_labels=True)
+        fn = make_train_step(cfg, AdamWConfig(), mesh=mesh,
+                             microbatches=TRAIN_MICROBATCHES)
+        metrics_shard = {k: _ns(mesh) for k in
+                         ("loss", "ce", "aux", "grad_norm")}
+        out_shardings = (state_shard, metrics_shard)
+        args = (state, batch)
+        in_shardings = (state_shard, batch_shard)
+        donate = (0,)                      # state buffers are reused
+        model_flops = 6.0 * n_active * tokens_total
+        probe_fn, probe_args, probe_shard = _train_probe(cfg, mesh, shape)
+    elif shape.kind == "prefill":
+        batch, batch_shard = _batch_specs(cfg, mesh, shape, with_labels=False)
+        fn = make_prefill_step(cfg, mesh=mesh)
+        args = (params, batch)
+        in_shardings = (p_shard, batch_shard)
+        out_shardings = None
+        donate = ()
+        model_flops = 2.0 * n_active * tokens_total
+        probe_fn, probe_args, probe_shard = _fwd_probe(cfg, mesh, shape)
+    else:  # decode
+        cache = cache_spec(cfg, shape.global_batch, shape.seq_len)
+        c_shard = _cache_shardings(cfg, mesh, shape.global_batch)
+        toks = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+        fn = make_serve_step(cfg)
+        args = (params, cache, toks)
+        in_shardings = (p_shard, c_shard, _ns(mesh, dp))
+        out_shardings = None
+        donate = (1,)                      # cache double-buffer elision
+        model_flops = 2.0 * n_active * shape.global_batch
+        probe_fn, probe_args, probe_shard = _decode_probe(cfg, mesh, shape)
+
+    # divisibility fixup on every *input* sharding (XLA hard requirement)
+    in_shardings = fix_tree(mesh, in_shardings, args)
+    probe_shard = fix_tree(mesh, probe_shard, probe_args)
+    if shape.kind == "train":
+        out_shardings = (in_shardings[0],
+                         {k: _ns(mesh) for k in
+                          ("loss", "ce", "aux", "grad_norm")})
+
+    fc, bc = _inner_loop_corrections(cfg, shape)
+    return Cell(arch=arch, shape=shape, cfg=cfg, fn=fn, args=args,
+                in_shardings=in_shardings, out_shardings=out_shardings,
+                donate=donate, probe_fn=probe_fn, probe_args=probe_args,
+                probe_in_shardings=probe_shard, n_layers=cfg.n_layers,
+                model_flops=model_flops, n_params=n_total, n_active=n_active,
+                flop_correction=fc, bytes_correction=bc)
+
+
+# ---------------------------------------------------------------------------
+# Layer probes
+# ---------------------------------------------------------------------------
+
+def _layer_abstract(cfg: ModelConfig):
+    """One unstacked layer: params tree + shardings kinds."""
+    params = abstract_params(cfg)["layers"]
+    strip = lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype)
+    lp = jax.tree.map(strip, params)
+    kinds = build_kinds(cfg)["layers"]
+    unstack = lambda k: k.split(":", 1)[1]
+    lk = jax.tree.map(unstack, kinds)
+    return lp, lk
+
+
+def _x_spec(cfg: ModelConfig, mesh: Mesh, b: int, s: int):
+    return (jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+            _ns(mesh, _dp(mesh, b), None, None))
+
+
+def _train_probe(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec):
+    lp, lk = _layer_abstract(cfg)
+    lp_shard = make_param_shardings(mesh, lk, cfg.fsdp)
+    x, x_shard = _x_spec(cfg, mesh, shape.global_batch, shape.seq_len)
+    layer = make_layer_fn(cfg, shape.seq_len, mesh)
+
+    def scalar(lp_, x_):
+        y, aux = jax.checkpoint(layer, policy=remat_policy(cfg))(lp_, x_)
+        return jnp.sum(y.astype(jnp.float32)) + aux
+
+    probe = jax.grad(scalar, argnums=(0, 1))
+    return probe, (lp, x), (lp_shard, x_shard)
+
+
+def _fwd_probe(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec):
+    lp, lk = _layer_abstract(cfg)
+    lp_shard = make_param_shardings(mesh, lk, cfg.fsdp)
+    x, x_shard = _x_spec(cfg, mesh, shape.global_batch, shape.seq_len)
+    layer = make_layer_fn(cfg, shape.seq_len, mesh)
+
+    def probe(lp_, x_):
+        return layer(lp_, x_)[0]
+
+    return probe, (lp, x), (lp_shard, x_shard)
+
+
+def _decode_probe(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec):
+    lp, lk = _layer_abstract(cfg)
+    lp_shard = make_param_shardings(mesh, lk, cfg.fsdp)
+    b = shape.global_batch
+    cache = cache_spec(cfg, b, shape.seq_len)
+    strip = lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype)
+    cs = {k: strip(v) for k, v in cache.items() if k != "index"}
+    csh_full = _cache_shardings(cfg, mesh, b)
+    csh = {k: NamedSharding(mesh, P(*v.spec[1:]))
+           for k, v in csh_full.items() if k != "index"}
+    x, x_shard = _x_spec(cfg, mesh, b, 1)
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def probe(lp_, c_, x_, idx):
+        body = make_decode_layer_fn(cfg, idx)
+        return body(lp_, c_, x_)
+
+    return probe, (lp, cs, x, index), (lp_shard, csh, x_shard, _ns(mesh))

@@ -1,0 +1,3 @@
+from .config import ModelConfig  # noqa: F401
+from .model import (abstract_params, build_kinds, count_params,  # noqa: F401
+                    forward, init_params)

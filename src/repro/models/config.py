@@ -1,0 +1,96 @@
+"""Model configuration covering all ten assigned architecture families."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int            # query heads (0 for attention-free archs)
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0         # 0 -> d_model // n_heads
+
+    # mixer: "attention" | "rwkv6" | "hymba" (parallel attn + SSM heads)
+    mixer: str = "attention"
+    # ffn: "gelu" | "swiglu" | "moe" | "moe_dense" (MoE + parallel dense
+    # residual, Arctic) | "rwkv_cm" (RWKV channel mix)
+    ffn: str = "swiglu"
+
+    # MoE
+    moe_experts: int = 0
+    moe_topk: int = 1
+    moe_capacity_factor: float = 1.25
+    moe_shared_expert: bool = False   # Llama-4 style shared expert
+
+    # positional / attention details
+    rope_fraction: float = 1.0        # ChatGLM3: 0.5 (2d RoPE)
+    rope_theta: float = 10000.0
+    window: int = 0                   # >0: sliding-window attention (hymba)
+
+    # SSM (hymba) / RWKV
+    ssm_state: int = 16
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0              # 0 -> ceil(d_model / 16)
+    rwkv_head_size: int = 64
+    rwkv_decay_rank: int = 64
+
+    # inputs: "tokens" | "embeds" (audio/VLM stub frontends feed embeddings)
+    input_mode: str = "tokens"
+
+    tie_embeddings: bool = False
+    # distribution
+    fsdp: bool = False                # shard weights over DP axes (>=100B)
+    remat: bool = True
+    # "nothing" (full recompute) | "save_outs" (keep post-collective layer
+    # outputs) | "offload_outs" (host-offload them) | "dots"
+    remat_policy: str = "nothing"
+    # sequence parallelism: shard layer-boundary activations over "model"
+    # along S (Megatron-SP); turns boundary all-reduces into AG+RS pairs
+    seq_parallel: bool = False
+    # long-context capability (sub-quadratic decode state)
+    subquadratic: bool = False
+
+    def __post_init__(self):
+        if self.n_heads and not self.d_head:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+        if self.mixer == "rwkv6":
+            object.__setattr__(self, "subquadratic", True)
+        if not self.ssm_dt_rank:
+            object.__setattr__(self, "ssm_dt_rank",
+                               max(1, -(-self.d_model // 16)))
+
+    @property
+    def rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_size
+
+    @property
+    def ssm_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    def tiny(self, **overrides) -> "ModelConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        base = dataclasses.asdict(self)
+        shrink = dict(
+            n_layers=2,
+            d_model=64,
+            n_heads=max(1, min(4, self.n_heads)) if self.n_heads else 0,
+            n_kv_heads=max(1, min(2, self.n_kv_heads)) if self.n_kv_heads else 0,
+            d_ff=128,
+            vocab=256,
+            d_head=16 if self.n_heads else 0,
+            moe_experts=min(4, self.moe_experts) if self.moe_experts else 0,
+            rwkv_head_size=16,
+            rwkv_decay_rank=8,
+            ssm_dt_rank=4,
+            window=min(16, self.window) if self.window else 0,
+            name=self.name + "-tiny",
+            fsdp=False,
+        )
+        base.update(shrink)
+        base.update(overrides)
+        return ModelConfig(**base)

@@ -1,0 +1,113 @@
+"""KV-cache / recurrent-state decode: cache specs, init, and serve steps.
+
+Decode state per family:
+  * attention: K/V ring buffers [L, B, S_cache, Hkv, hd] + write index
+    (S_cache = window for sliding-window archs — O(1) in context length);
+  * rwkv6: WKV matrix state [L, B, H, hd, hd] + token-shift carries — O(1);
+  * hymba: windowed K/V ring + SSM state [L, B, di, N] + conv carry — O(1).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .ffn import ffn_block, rwkv_channel_mix
+from .layers import attention_decode, rms_norm
+from .model import Params, _embed_inputs
+from .rwkv6 import rwkv6_block
+from .ssm import ssm_block
+
+Cache = dict[str, Any]
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Cache:
+    """ShapeDtypeStruct tree describing the decode state."""
+    L = cfg.n_layers
+    spec: Cache = {"index": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.mixer in ("attention", "hymba"):
+        s = max_seq if cfg.window == 0 else min(max_seq, cfg.window)
+        hk, hd = cfg.n_kv_heads, cfg.d_head
+        spec["k"] = jax.ShapeDtypeStruct((L, batch, s, hk, hd), dtype)
+        spec["v"] = jax.ShapeDtypeStruct((L, batch, s, hk, hd), dtype)
+    if cfg.mixer == "hymba":
+        spec["ssm"] = jax.ShapeDtypeStruct(
+            (L, batch, cfg.ssm_inner, cfg.ssm_state), jnp.float32)
+        spec["conv"] = jax.ShapeDtypeStruct(
+            (L, batch, 3, cfg.ssm_inner), dtype)
+    if cfg.mixer == "rwkv6":
+        h, hd = cfg.rwkv_heads, cfg.rwkv_head_size
+        spec["wkv"] = jax.ShapeDtypeStruct((L, batch, h, hd, hd), jnp.float32)
+        spec["x_tm"] = jax.ShapeDtypeStruct((L, batch, cfg.d_model), dtype)
+    if cfg.ffn == "rwkv_cm":
+        spec["x_cm"] = jax.ShapeDtypeStruct((L, batch, cfg.d_model), dtype)
+    return spec
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Cache:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_seq, dtype))
+
+
+def make_decode_layer_fn(cfg: ModelConfig, index: jax.Array):
+    """Per-layer decode body (lp, cache_slice, x) -> (x, new cache slice) —
+    shared by decode_step's scan and the dry-run's per-layer probe."""
+    def step_layer(lp: Params, c: Cache, x: jax.Array):
+        newc = {}
+        h = rms_norm(x, lp["ln1"])
+        if cfg.mixer == "attention":
+            y, ck, cv = attention_decode(lp["attn"], h, cfg, c["k"], c["v"],
+                                         index)
+            newc |= {"k": ck, "v": cv}
+        elif cfg.mixer == "rwkv6":
+            y, wkv, _ = rwkv6_block(lp["tmix"], h, cfg, state=c["wkv"],
+                                    x_last=c["x_tm"])
+            newc |= {"wkv": wkv, "x_tm": h[:, -1]}
+        elif cfg.mixer == "hymba":
+            ya, ck, cv = attention_decode(lp["attn"], h, cfg, c["k"], c["v"],
+                                          index)
+            ys, sst, conv = ssm_block(lp["ssm"], h, cfg, state=c["ssm"],
+                                      conv_carry=c["conv"])
+            y = 0.5 * (rms_norm(ya, lp["ln_a"]) + rms_norm(ys, lp["ln_s"]))
+            newc |= {"k": ck, "v": cv, "ssm": sst, "conv": conv}
+        x = x + y
+        h = rms_norm(x, lp["ln2"])
+        if cfg.ffn == "rwkv_cm":
+            f = rwkv_channel_mix(lp["ffn"], h, c["x_cm"][:, None])
+            newc["x_cm"] = h[:, -1]
+        else:
+            f, _ = ffn_block(lp["ffn"], h, cfg)
+        return x + f, newc
+
+    return step_layer
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Cache,
+                tokens: jax.Array) -> tuple[jax.Array, Cache]:
+    """One new token for the whole batch against the running cache.
+
+    tokens: [B] int32 -> (logits [B, V] fp32, new cache)."""
+    index = cache["index"]
+    x = _embed_inputs(params, cfg, tokens[:, None], None)
+    layer_cache = {k: v for k, v in cache.items() if k != "index"}
+    step_layer = make_decode_layer_fn(cfg, index)
+
+    def step(x, inp):
+        lp, c = inp
+        x, newc = step_layer(lp, c, x)
+        return x, newc
+
+    x, new_layer_cache = jax.lax.scan(step, x,
+                                      (params["layers"], layer_cache))
+    x = rms_norm(x, params["final_norm"])
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"]["tok"].T
+    logits = x[:, 0].astype(jnp.float32) @ head.astype(jnp.float32)
+    new_cache: Cache = dict(new_layer_cache)
+    new_cache["index"] = index + 1
+    return logits, new_cache

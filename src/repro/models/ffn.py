@@ -1,0 +1,135 @@
+"""FFN variants: GELU MLP, SwiGLU, RWKV channel-mix, and MoE.
+
+The MoE uses flop-honest scatter/gather dispatch (no one-hot dispatch
+einsums): tokens are routed top-k with per-batch-row grouped capacity,
+scattered into an [B, E, C, d] buffer (drop on overflow), pushed through
+batched expert matmuls, and gathered back with their gate weights.  Expert
+weights shard over the ``model`` axis (EP) and optionally over DP (FSDP).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import DP_AXES, constrain
+
+#: mesh axis for the expert dim of dispatch buffers ("model" = EP,
+#: None = replicated).  §Perf knob; see EXPERIMENTS.md.
+MOE_EP_AXIS = None
+from .config import ModelConfig
+
+
+def gelu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ p["w_in"] + p["b_in"])
+    return h @ p["w_out"] + p["b_out"]
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def rwkv_channel_mix(p: dict, x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    """RWKV channel mix with token shift.  x/x_prev: [B, S, d]."""
+    xk = x + (x_prev - x) * p["mu_k"]
+    xr = x + (x_prev - x) * p["mu_r"]
+    r = jax.nn.sigmoid(xr @ p["w_r"])
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return r * (k @ p["w_v"])
+
+
+def _route(router_w: jax.Array, x: jax.Array, cfg: ModelConfig):
+    """-> (top-k weights [B,S,k], indices [B,S,k], aux load-balance loss).
+
+    The router matmul runs in the activation dtype (bf16) with fp32 softmax
+    on the small [B,S,E] logits — an fp32 d-dim router matmul drags fp32
+    activation gradients through the backward all-reduces (§Perf)."""
+    logits = (x @ router_w.astype(x.dtype)).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)                  # [B, S, E]
+    topw, topi = jax.lax.top_k(gates, cfg.moe_topk)
+    topw = topw / jnp.clip(topw.sum(-1, keepdims=True), 1e-9)
+    # Switch-style aux loss: E * sum_e mean(gate_e) * mean(assigned_e)
+    e = cfg.moe_experts
+    me = jnp.mean(gates, axis=(0, 1))
+    assign = jax.nn.one_hot(topi[..., 0], e, dtype=jnp.float32)
+    ce = jnp.mean(assign, axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+    return topw, topi, aux
+
+
+def moe_block(p: dict, x: jax.Array, cfg: ModelConfig, mesh=None
+              ) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y, aux_loss).  Grouped capacity per batch row.
+
+    Gather-based dispatch (EXPERIMENTS.md §Perf iterations 2-3): only an
+    *int32 slot->token index map* is built by scatter (tiny); the d-dim
+    dispatch is a gather from the model-replicated activations — fully
+    local under EP — and the combine is one masked gather the partitioner
+    can lower to a single activation-sized all-reduce.  Scattering the
+    d-dim buffer directly (the naive formulation) makes SPMD emit multi-GB
+    fp32 all-reduces in backward (measured: 5-10x worse).
+    """
+    b, s, d = x.shape
+    k, e = cfg.moe_topk, cfg.moe_experts
+    cap = max(1, int(s * k / e * cfg.moe_capacity_factor))
+
+    def ep(t, *spec):
+        return constrain(t, mesh, *spec) if mesh is not None else t
+
+    topw, topi, aux = _route(p["router"], x, cfg)            # [B,S,k]
+    flat_e = topi.reshape(b, s * k)                          # [B, S*k]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)      # [B, S*k, E]
+    pos_all = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.take_along_axis(pos_all, flat_e[..., None],
+                              axis=-1)[..., 0]               # [B, S*k]
+    bi = jax.lax.broadcasted_iota(jnp.int32, (b, s * k), 0)
+
+    # slot -> token map (int32; sentinel = s*k points at a zero row)
+    tok_ids = jax.lax.broadcasted_iota(jnp.int32, (b, s * k), 1)
+    slot = jnp.full((b, e, cap), s * k, jnp.int32)
+    slot = slot.at[bi, flat_e, pos].set(tok_ids, mode="drop")
+    slot = ep(slot, DP_AXES, MOE_EP_AXIS, None)
+
+    xk = jnp.broadcast_to(x[:, :, None, :], (b, s, k, d)).reshape(b, s * k, d)
+    xk_pad = jnp.concatenate([xk, jnp.zeros((b, 1, d), xk.dtype)], axis=1)
+    bi3 = jax.lax.broadcasted_iota(jnp.int32, (b, e, cap), 0)
+    buf = xk_pad[bi3, slot]                                  # local gather
+    buf = ep(buf, DP_AXES, MOE_EP_AXIS, None, None)          # EP layout
+
+    h_g = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+    h_u = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    out_buf = jnp.einsum("becf,efd->becd",
+                         jax.nn.silu(h_g) * h_u, p["w_down"])
+    out_buf = ep(out_buf, DP_AXES, MOE_EP_AXIS, None, None)
+
+    gathered = out_buf.at[bi, flat_e, pos].get(
+        mode="fill", fill_value=0)                           # [B, S*k, d]
+    gathered = ep(gathered, DP_AXES, None, None)
+    y = (gathered.reshape(b, s, k, d)
+         * topw[..., None].astype(x.dtype)).sum(axis=2)
+
+    if cfg.moe_shared_expert:
+        y = y + swiglu({"w_gate": p["s_gate"], "w_up": p["s_up"],
+                        "w_down": p["s_down"]}, x)
+    return y, aux
+
+
+def ffn_block(p: dict, x: jax.Array, cfg: ModelConfig,
+              x_prev: jax.Array | None = None, mesh=None
+              ) -> tuple[jax.Array, jax.Array]:
+    """Dispatch on cfg.ffn.  Returns (y, aux_loss)."""
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.ffn == "gelu":
+        return gelu_mlp(p, x), zero
+    if cfg.ffn == "swiglu":
+        return swiglu(p, x), zero
+    if cfg.ffn == "rwkv_cm":
+        assert x_prev is not None
+        return rwkv_channel_mix(p, x, x_prev), zero
+    if cfg.ffn == "moe":
+        return moe_block(p, x, cfg, mesh)
+    if cfg.ffn == "moe_dense":   # Arctic: dense residual MLP || MoE
+        y_moe, aux = moe_block(p, x, cfg, mesh)
+        y_dense = swiglu({"w_gate": p["d_gate"], "w_up": p["d_up"],
+                          "w_down": p["d_down"]}, x)
+        return y_moe + y_dense, aux
+    raise ValueError(f"unknown ffn {cfg.ffn!r}")

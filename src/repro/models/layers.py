@@ -1,0 +1,167 @@
+"""Core layers: norms, RoPE (full + partial), GQA attention (full, causal,
+sliding-window, and single-token decode against a KV cache)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def rms_norm(x: jax.Array, gain: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gain.astype(jnp.float32)).astype(dt)
+
+
+def rope_angles(positions: jax.Array, d_rot: int, theta: float) -> tuple:
+    """-> (sin, cos) of shape [*positions.shape, d_rot // 2]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, fraction: float,
+               theta: float) -> jax.Array:
+    """x: [..., seq, heads, d_head]; rotates the first ``fraction`` of dims."""
+    d_head = x.shape[-1]
+    d_rot = int(d_head * fraction)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    sin, cos = rope_angles(positions, d_rot, theta)     # [..., seq, d_rot/2]
+    sin = sin[..., None, :].astype(jnp.float32)
+    cos = cos[..., None, :].astype(jnp.float32)
+    rot, rest = x[..., :d_rot], x[..., d_rot:]
+    r1, r2 = rot[..., 0::2].astype(jnp.float32), rot[..., 1::2].astype(jnp.float32)
+    o1 = r1 * cos - r2 * sin
+    o2 = r2 * cos + r1 * sin
+    rot = jnp.stack([o1, o2], axis=-1).reshape(rot.shape).astype(x.dtype)
+    return jnp.concatenate([rot, rest], axis=-1)
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """[B, S, Hkv, hd] -> [B, S, Hkv*n_rep, hd] (GQA head sharing)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)) \
+        .reshape(b, s, h * n_rep, d)
+
+
+def attention_scores(q: jax.Array, k: jax.Array, v: jax.Array,
+                     mask: jax.Array) -> jax.Array:
+    """Reference softmax attention.  q/k/v: [B, S, H, hd]; mask broadcastable
+    to [B, H, Sq, Sk]."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def causal_mask(seq: int, window: int = 0) -> jax.Array:
+    """[1, 1, S, S] causal (optionally banded / sliding-window) mask."""
+    qi = jax.lax.broadcasted_iota(jnp.int32, (seq, seq), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (seq, seq), 1)
+    m = ki <= qi
+    if window > 0:
+        m &= (qi - ki) < window
+    return m[None, None]
+
+
+#: sequences longer than this use the blocked (q-tile) attention path
+BLOCKED_ATTN_THRESHOLD = 1024
+Q_BLOCK = 512
+
+
+def _blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                       window: int) -> jax.Array:
+    """Causal attention without materialising [S, S] scores or masks.
+
+    Scans over q tiles; each tile builds its [qb, S] mask from position
+    arithmetic.  This is the XLA analogue of the Pallas flash-attention
+    kernel in ``repro.kernels.flash_attention`` (same tiling, same math).
+    NOTE: XLA cost analysis counts the tile body once — the dry-run adds
+    the analytic correction for the remaining tiles (launch/specs.py).
+    """
+    b, s, h, hd = q.shape
+    qb = Q_BLOCK if s % Q_BLOCK == 0 else s
+    n_blocks = s // qb
+    scale = hd ** -0.5
+    ki = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, s), 3)
+
+    qs = q.reshape(b, n_blocks, qb, h, hd).swapaxes(0, 1)
+
+    def tile(carry, q_i):
+        i = carry
+        qpos = i * qb + jax.lax.broadcasted_iota(jnp.int32, (1, 1, qb, 1), 2)
+        m = ki <= qpos
+        if window > 0:
+            m &= (qpos - ki) < window
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q_i, k,
+                            preferred_element_type=jnp.float32) * scale
+        logits = jnp.where(m, logits, jnp.finfo(jnp.float32).min)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+        return i + 1, o
+
+    _, os_ = jax.lax.scan(tile, jnp.int32(0), qs)
+    return os_.swapaxes(0, 1).reshape(b, s, h, hd)
+
+
+def attention_block(p: dict, x: jax.Array, cfg: ModelConfig,
+                    positions: jax.Array, mask: jax.Array) -> jax.Array:
+    """Full-sequence GQA attention (training / prefill).
+
+    p: {wq, wk, wv, wo}; x: [B, S, d]."""
+    b, s, _ = x.shape
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, hk, hd)
+    v = (x @ p["wv"]).reshape(b, s, hk, hd)
+    q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+    k = _repeat_kv(k, h // hk)
+    v = _repeat_kv(v, h // hk)
+    if s > BLOCKED_ATTN_THRESHOLD:
+        o = _blocked_attention(q, k, v, cfg.window)
+    else:
+        o = attention_scores(q, k, v, mask)
+    return o.reshape(b, s, h * hd) @ p["wo"]
+
+
+def attention_decode(p: dict, x: jax.Array, cfg: ModelConfig,
+                     cache_k: jax.Array, cache_v: jax.Array,
+                     index: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode. x: [B, 1, d]; cache_k/v: [B, S_max, Hkv, hd];
+    ``index`` is the write position (ring position for sliding windows).
+
+    Returns (out [B, 1, d], new_cache_k, new_cache_v)."""
+    b, _, _ = x.shape
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    s_max = cache_k.shape[1]
+    pos = index[None] if index.ndim == 0 else index
+
+    q = (x @ p["wq"]).reshape(b, 1, h, hd)
+    k = (x @ p["wk"]).reshape(b, 1, hk, hd)
+    v = (x @ p["wv"]).reshape(b, 1, hk, hd)
+    q = apply_rope(q, pos.reshape(1, 1), cfg.rope_fraction, cfg.rope_theta)
+    k = apply_rope(k, pos.reshape(1, 1), cfg.rope_fraction, cfg.rope_theta)
+
+    slot = jnp.mod(index, s_max) if cfg.window > 0 else index
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+
+    kk = _repeat_kv(cache_k, h // hk)
+    vv = _repeat_kv(cache_v, h // hk)
+    # valid positions: <= index (ring buffers are fully valid once wrapped)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, s_max), 3)
+    valid = ki <= index if cfg.window == 0 else \
+        (ki <= index) | (index >= s_max)
+    o = attention_scores(q, kk.astype(q.dtype), vv.astype(q.dtype), valid)
+    return o.reshape(b, 1, h * hd) @ p["wo"], cache_k, cache_v

@@ -1,0 +1,334 @@
+"""DecoderLM assembly: init / kinds / forward (train + prefill) / decode.
+
+One flexible decoder covers all ten assigned architectures via
+``ModelConfig.mixer`` (attention | rwkv6 | hymba) and ``ModelConfig.ffn``
+(gelu | swiglu | moe | moe_dense | rwkv_cm).  Layers are scanned
+(``lax.scan`` over stacked [L, ...] params) with rematerialisation, which
+keeps the HLO compact for the 512-device dry-runs.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+from jax.sharding import Mesh
+
+from repro.sharding.rules import DP_AXES, constrain
+from .config import ModelConfig
+from .ffn import ffn_block
+from .layers import attention_block, attention_decode, causal_mask, rms_norm
+from .rwkv6 import _token_shift, rwkv6_block
+from .ssm import ssm_block
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _layer_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    d, f = cfg.d_model, cfg.d_ff
+    sh: dict[str, tuple] = {"ln1": (d,), "ln2": (d,)}
+
+    if cfg.mixer in ("attention", "hymba"):
+        h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        sh |= {"attn.wq": (d, h * hd), "attn.wk": (d, hk * hd),
+               "attn.wv": (d, hk * hd), "attn.wo": (h * hd, d)}
+    if cfg.mixer == "hymba":
+        di, n, r = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_dt_rank
+        sh |= {"ssm.in_proj": (d, 2 * di), "ssm.conv_w": (4, di),
+               "ssm.x_proj": (di, r + 2 * n), "ssm.dt_proj": (r, di),
+               "ssm.dt_bias": (di,), "ssm.a_log": (di, n),
+               "ssm.d_skip": (di,), "ssm.out_proj": (di, d),
+               "ln_a": (d,), "ln_s": (d,)}
+    if cfg.mixer == "rwkv6":
+        h, hd, r = cfg.rwkv_heads, cfg.rwkv_head_size, cfg.rwkv_decay_rank
+        sh |= {"tmix.mu_r": (d,), "tmix.mu_k": (d,), "tmix.mu_v": (d,),
+               "tmix.mu_g": (d,), "tmix.mu_w": (d,),
+               "tmix.w_r": (d, d), "tmix.w_k": (d, d), "tmix.w_v": (d, d),
+               "tmix.w_g": (d, d), "tmix.w_o": (d, d),
+               "tmix.decay_a": (d, r), "tmix.decay_b": (r, d),
+               "tmix.w0": (d,), "tmix.u": (h, hd), "tmix.ln_x": (d,)}
+
+    if cfg.ffn == "gelu":
+        sh |= {"ffn.w_in": (d, f), "ffn.b_in": (f,),
+               "ffn.w_out": (f, d), "ffn.b_out": (d,)}
+    elif cfg.ffn == "swiglu":
+        sh |= {"ffn.w_gate": (d, f), "ffn.w_up": (d, f), "ffn.w_down": (f, d)}
+    elif cfg.ffn == "rwkv_cm":
+        sh |= {"ffn.mu_r": (d,), "ffn.mu_k": (d,),
+               "ffn.w_r": (d, d), "ffn.w_k": (d, f), "ffn.w_v": (f, d)}
+    elif cfg.ffn in ("moe", "moe_dense"):
+        e = cfg.moe_experts
+        sh |= {"ffn.router": (d, e), "ffn.w_gate": (e, d, f),
+               "ffn.w_up": (e, d, f), "ffn.w_down": (e, f, d)}
+        if cfg.moe_shared_expert:
+            sh |= {"ffn.s_gate": (d, f), "ffn.s_up": (d, f),
+                   "ffn.s_down": (f, d)}
+        if cfg.ffn == "moe_dense":
+            sh |= {"ffn.d_gate": (d, f), "ffn.d_up": (d, f),
+                   "ffn.d_down": (f, d)}
+    return sh
+
+
+_KIND_BY_SUFFIX = {
+    "ln1": "norm", "ln2": "norm", "ln_a": "norm", "ln_s": "norm",
+    "attn.wq": "in_proj", "attn.wk": "in_proj", "attn.wv": "in_proj",
+    "attn.wo": "out_proj",
+    "ssm.in_proj": "in_proj", "ssm.conv_w": "conv",
+    "ssm.x_proj": "ssm_xproj", "ssm.dt_proj": "ssm_dtproj",
+    "ssm.dt_bias": "ssm_vec", "ssm.a_log": "ssm_a", "ssm.d_skip": "ssm_vec",
+    "ssm.out_proj": "out_proj",
+    "tmix.mu_r": "norm", "tmix.mu_k": "norm", "tmix.mu_v": "norm",
+    "tmix.mu_g": "norm", "tmix.mu_w": "norm",
+    "tmix.w_r": "in_proj", "tmix.w_k": "in_proj", "tmix.w_v": "in_proj",
+    "tmix.w_g": "in_proj", "tmix.w_o": "out_proj",
+    "tmix.decay_a": "lowrank_in", "tmix.decay_b": "replicated",
+    "tmix.w0": "norm", "tmix.u": "replicated", "tmix.ln_x": "norm",
+    "ffn.w_in": "in_proj", "ffn.b_in": "bias_ff", "ffn.w_out": "out_proj",
+    "ffn.b_out": "norm",
+    "ffn.w_gate": "in_proj", "ffn.w_up": "in_proj", "ffn.w_down": "out_proj",
+    "ffn.mu_r": "norm", "ffn.mu_k": "norm",
+    "ffn.w_r": "in_proj", "ffn.w_k": "in_proj", "ffn.w_v": "out_proj",
+    "ffn.router": "router",
+    "ffn.s_gate": "in_proj", "ffn.s_up": "in_proj", "ffn.s_down": "out_proj",
+    "ffn.d_gate": "in_proj", "ffn.d_up": "in_proj", "ffn.d_down": "out_proj",
+}
+
+_MOE_KINDS = {"ffn.w_gate": "expert_in", "ffn.w_up": "expert_in",
+              "ffn.w_down": "expert_out"}
+
+
+def _layer_kind(cfg: ModelConfig, name: str) -> str:
+    if cfg.ffn in ("moe", "moe_dense") and name in _MOE_KINDS:
+        return _MOE_KINDS[name]
+    return _KIND_BY_SUFFIX[name]
+
+
+def _nest(flat: dict[str, Any]) -> dict:
+    out: dict = {}
+    for k, v in flat.items():
+        node = out
+        parts = k.split(".")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return out
+
+
+def init_params(cfg: ModelConfig, key: jax.Array,
+                dtype=jnp.float32) -> Params:
+    """Real initialisation (smoke tests / the training examples)."""
+    d = cfg.d_model
+    shapes = _layer_shapes(cfg)
+    keys = jax.random.split(key, len(shapes) + 3)
+    flat: dict[str, jax.Array] = {}
+    scale_out = 0.02 / math.sqrt(2 * cfg.n_layers)
+
+    for i, (name, sh) in enumerate(sorted(shapes.items())):
+        full = (cfg.n_layers, *sh)
+        if name.startswith(("ln", "tmix.ln")) or name.endswith(
+                ("ln_x", "ln_a", "ln_s", "ln1", "ln2")):
+            flat[name] = jnp.ones(full, dtype)
+        elif name.endswith(("mu_r", "mu_k", "mu_v", "mu_g", "mu_w")):
+            flat[name] = jnp.full(full, 0.5, dtype)
+        elif name.endswith("w0"):
+            flat[name] = jnp.full(full, -2.0, dtype)
+        elif name.endswith("tmix.u"):
+            flat[name] = jnp.full(full, 0.5, dtype)
+        elif name.endswith("dt_bias"):
+            flat[name] = jnp.full(full, -4.6, dtype)
+        elif name.endswith("a_log"):
+            a = jnp.log(jnp.arange(1, cfg.ssm_state + 1, dtype=jnp.float32))
+            flat[name] = jnp.broadcast_to(a, full).astype(dtype)
+        elif name.endswith("d_skip"):
+            flat[name] = jnp.ones(full, dtype)
+        elif name.endswith(("b_in", "b_out")):
+            flat[name] = jnp.zeros(full, dtype)
+        else:
+            s = scale_out if name.endswith(("wo", "w_out", "w_down",
+                                            "out_proj", "w_o", "w_v")) else 0.02
+            flat[name] = (jax.random.normal(keys[i], full, jnp.float32)
+                          * s).astype(dtype)
+
+    params: Params = {"layers": _nest(flat),
+                      "final_norm": jnp.ones((d,), dtype)}
+    params["embed"] = {"tok": (jax.random.normal(
+        keys[-1], (cfg.vocab, d), jnp.float32) * 0.02).astype(dtype)}
+    if cfg.input_mode == "embeds":
+        params["embed"]["proj"] = (jax.random.normal(
+            keys[-2], (d, d), jnp.float32) * 0.02).astype(dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            keys[-3], (d, cfg.vocab), jnp.float32) * 0.02).astype(dtype)
+    return params
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    flat = {name: jax.ShapeDtypeStruct((cfg.n_layers, *sh), dtype)
+            for name, sh in _layer_shapes(cfg).items()}
+    params: Params = {"layers": _nest(flat),
+                      "final_norm": jax.ShapeDtypeStruct((cfg.d_model,), dtype)}
+    params["embed"] = {"tok": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model),
+                                                   dtype)}
+    if cfg.input_mode == "embeds":
+        params["embed"]["proj"] = jax.ShapeDtypeStruct(
+            (cfg.d_model, cfg.d_model), dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.ShapeDtypeStruct((cfg.d_model, cfg.vocab),
+                                                 dtype)
+    return params
+
+
+def build_kinds(cfg: ModelConfig) -> Params:
+    """Logical-kind tree mirroring the params tree (for sharding rules)."""
+    flat = {name: "stack:" + _layer_kind(cfg, name)
+            for name in _layer_shapes(cfg)}
+    kinds: Params = {"layers": _nest(flat), "final_norm": "norm"}
+    kinds["embed"] = {"tok": "embed"}
+    if cfg.input_mode == "embeds":
+        kinds["embed"]["proj"] = "replicated"
+    if not cfg.tie_embeddings:
+        kinds["lm_head"] = "head"
+    return kinds
+
+
+def count_params(cfg: ModelConfig) -> tuple[int, int]:
+    """(total params, active params per token) — MODEL_FLOPS inputs."""
+    total = cfg.d_model  # final norm
+    active = cfg.d_model
+    for name, sh in _layer_shapes(cfg).items():
+        n = cfg.n_layers * math.prod(sh)
+        total += n
+        if name in _MOE_KINDS and cfg.ffn in ("moe", "moe_dense"):
+            active += n // cfg.moe_experts * cfg.moe_topk
+        else:
+            active += n
+    emb = cfg.vocab * cfg.d_model
+    total += emb
+    active += emb
+    if cfg.input_mode == "embeds":
+        total += cfg.d_model ** 2
+        active += cfg.d_model ** 2
+    if not cfg.tie_embeddings:
+        total += emb
+        active += emb
+    return total, active
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params: Params, cfg: ModelConfig, tokens, embeds):
+    if embeds is not None:
+        x = embeds
+        if "proj" in params["embed"]:
+            x = x @ params["embed"]["proj"]
+        return x
+    return jnp.take(params["embed"]["tok"], tokens, axis=0)
+
+
+def _mixer(lp: Params, x: jax.Array, cfg: ModelConfig, positions, mask,
+           mesh: Mesh | None) -> jax.Array:
+    h = rms_norm(x, lp["ln1"])
+    if cfg.mixer == "attention":
+        return attention_block(lp["attn"], h, cfg, positions, mask)
+    if cfg.mixer == "rwkv6":
+        y, _, _ = rwkv6_block(lp["tmix"], h, cfg)
+        return y
+    if cfg.mixer == "hymba":
+        ya = attention_block(lp["attn"], h, cfg, positions, mask)
+        ys, _, _ = ssm_block(lp["ssm"], h, cfg)
+        return 0.5 * (rms_norm(ya, lp["ln_a"]) + rms_norm(ys, lp["ln_s"]))
+    raise ValueError(cfg.mixer)
+
+
+def remat_policy(cfg: ModelConfig):
+    """Map cfg.remat_policy to a jax checkpoint policy (§Perf knob).
+
+    The post-collective layer outputs are tagged "mixer_out"/"ffn_out";
+    saving or offloading them spares the backward pass from recomputing the
+    forward activation all-reduces (measured in EXPERIMENTS.md §Perf).
+    """
+    cp = jax.checkpoint_policies
+    if cfg.remat_policy == "nothing":
+        return cp.nothing_saveable
+    if cfg.remat_policy == "dots":
+        return cp.dots_with_no_batch_dims_saveable
+    if cfg.remat_policy == "save_outs":
+        return cp.save_only_these_names("mixer_out", "ffn_out")
+    if cfg.remat_policy == "offload_outs":
+        return cp.save_and_offload_only_these_names(
+            names_which_can_be_saved=[],
+            names_which_can_be_offloaded=["mixer_out", "ffn_out"],
+            offload_src="device", offload_dst="pinned_host")
+    raise ValueError(cfg.remat_policy)
+
+
+def make_layer_fn(cfg: ModelConfig, seq: int, mesh: Mesh | None = None):
+    """Layer body (lp, x) -> (x, aux) — used by forward's scan and by the
+    dry-run's per-layer cost probe."""
+    positions = jnp.arange(seq, dtype=jnp.int32)[None]
+    mask = causal_mask(seq, cfg.window) \
+        if cfg.mixer in ("attention", "hymba") else None
+
+    def layer(lp: Params, xx: jax.Array) -> tuple[jax.Array, jax.Array]:
+        y = _mixer(lp, xx, cfg, positions, mask, mesh)
+        y = checkpoint_name(y, "mixer_out")
+        xx = xx + y
+        h = rms_norm(xx, lp["ln2"])
+        if cfg.ffn == "rwkv_cm":
+            f, a = ffn_block(lp["ffn"], h, cfg, x_prev=_token_shift(h),
+                             mesh=mesh)
+        else:
+            f, a = ffn_block(lp["ffn"], h, cfg, mesh=mesh)
+        f = checkpoint_name(f, "ffn_out")
+        xx = xx + f
+        if mesh is not None:
+            sp = "model" if cfg.seq_parallel else None
+            xx = constrain(xx, mesh, DP_AXES, sp, None)
+        return xx, a
+
+    return layer
+
+
+def forward(params: Params, cfg: ModelConfig, tokens=None, embeds=None,
+            mesh: Mesh | None = None,
+            last_only: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits fp32, aux loss).
+
+    ``last_only`` slices the final position *before* the LM head (prefill
+    only needs the next-token distribution — avoids a [B,S,V] buffer)."""
+    x = _embed_inputs(params, cfg, tokens, embeds)
+    b, s, d = x.shape
+    if mesh is not None:
+        x = constrain(x, mesh, DP_AXES, None, None)
+    layer_fn = make_layer_fn(cfg, s, mesh)
+
+    def layer(carry, lp):
+        xx, aux = carry
+        xx, a = layer_fn(lp, xx)
+        return (xx, aux + a), None
+
+    body = layer
+    if cfg.remat:
+        body = jax.checkpoint(layer, policy=remat_policy(cfg))
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    x = rms_norm(x, params["final_norm"])
+    if last_only:
+        x = x[:, -1:]
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"]["tok"].T
+    logits = x.astype(jnp.float32) @ head.astype(jnp.float32)
+    if mesh is not None:
+        logits = constrain(logits, mesh, DP_AXES, None, "model")
+    return logits, aux

@@ -1,0 +1,94 @@
+"""RWKV-6 (Finch) time mix with data-dependent decay [arXiv:2404.05892].
+
+Faithful core: token-shift interpolation, per-channel data-dependent decay
+``w = exp(-exp(w0 + tanh(x_w A) B))``, bonus ``u``, per-head WKV state
+``S ∈ R^{hd x hd}`` updated as ``S <- diag(w) S + k v^T`` with readout
+``y = r (S + diag(u) k v^T)``.  (The full model's LoRA-style token-shift
+mixers are collapsed to static mixers — noted in DESIGN.md §5.)
+
+Train path scans over time with ``lax.scan``; the chunked Pallas kernel in
+``repro.kernels.rwkv6`` implements the same recurrence blockwise for TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rms_norm
+
+
+def _token_shift(x: jax.Array, x_last: jax.Array | None = None) -> jax.Array:
+    """x: [B, S, d] -> previous-token tensor (zeros / carry at position 0)."""
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if x_last is not None:
+        prev = prev.at[:, 0].set(x_last)
+    return prev
+
+
+def _project(p: dict, x: jax.Array, prev: jax.Array, cfg: ModelConfig):
+    """Token-shifted projections -> r, k, v, g, w (decay)."""
+    def lerp(mu):
+        return x + (prev - x) * mu
+
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_size
+    b, s, _ = x.shape
+    r = (lerp(p["mu_r"]) @ p["w_r"]).reshape(b, s, h, hd)
+    k = (lerp(p["mu_k"]) @ p["w_k"]).reshape(b, s, h, hd)
+    v = (lerp(p["mu_v"]) @ p["w_v"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(lerp(p["mu_g"]) @ p["w_g"])
+    # data-dependent decay (the Finch contribution)
+    xw = lerp(p["mu_w"]).astype(jnp.float32)
+    dd = jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]
+    w = jnp.exp(-jnp.exp(p["w0"].astype(jnp.float32) + dd))
+    w = w.reshape(b, s, h, hd)
+    return r, k, v, g, w
+
+
+def wkv_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, state: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Sequential WKV recurrence.
+
+    r/k/v/w: [B, S, H, hd]; u: [H, hd]; state: [B, H, hd, hd] (k-major).
+    Returns (y [B, S, H, hd], final state)."""
+    rt = jnp.moveaxis(r, 1, 0).astype(jnp.float32)
+    kt = jnp.moveaxis(k, 1, 0).astype(jnp.float32)
+    vt = jnp.moveaxis(v, 1, 0).astype(jnp.float32)
+    wt = jnp.moveaxis(w, 1, 0).astype(jnp.float32)
+    uu = u.astype(jnp.float32)
+
+    def step(s, inp):
+        r_, k_, v_, w_ = inp
+        kv = k_[..., :, None] * v_[..., None, :]            # [B,H,hd,hd]
+        y = jnp.einsum("bhk,bhkv->bhv", r_, s + uu[..., None] * kv)
+        s = w_[..., :, None] * s + kv
+        return s, y
+
+    state, y = jax.lax.scan(step, state.astype(jnp.float32),
+                            (rt, kt, vt, wt))
+    return jnp.moveaxis(y, 0, 1), state
+
+
+def rwkv6_block(p: dict, x: jax.Array, cfg: ModelConfig,
+                state: jax.Array | None = None,
+                x_last: jax.Array | None = None):
+    """Full time-mix block (training / prefill).
+
+    Returns (out [B,S,d], final wkv state, last token of x)."""
+    b, s, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_size
+    prev = _token_shift(x, x_last)
+    r, k, v, g, w = _project(p, x, prev, cfg)
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    y, state = wkv_scan(r, k, v, w, p["u"], state)
+    y = y.reshape(b * s, h, hd)
+    y = rms_norm(y, p["ln_x"].reshape(h, hd)).reshape(b, s, d)
+    out = (y.astype(x.dtype) * g) @ p["w_o"]
+    return out, state, x[:, -1]
+
+
+def rwkv6_decode(p: dict, x: jax.Array, cfg: ModelConfig,
+                 state: jax.Array, x_last: jax.Array):
+    """Single-token step: x [B, 1, d]; O(1) state."""
+    return rwkv6_block(p, x, cfg, state=state, x_last=x_last)

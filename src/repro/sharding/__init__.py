@@ -1,0 +1,2 @@
+from .rules import (DP_AXES, make_param_shardings, batch_spec,  # noqa: F401
+                    constrain, param_spec)

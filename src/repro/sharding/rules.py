@@ -1,0 +1,93 @@
+"""Logical-axis sharding rules for the (pod, data, model) production mesh.
+
+Conventions (Megatron-style TP over ``model``, DP over ``pod`` x ``data``,
+optional FSDP weight sharding over the DP axes for >=100B-param models):
+
+  * activations: [batch, seq, d]            -> P(DP, None, None)
+  * attn/ffn in-projections: [d, hidden]    -> P(FSDP?, "model")
+  * out-projections: [hidden, d]            -> P("model", FSDP?)
+  * embeddings / lm head: vocab over "model" (vocab-parallel)
+  * MoE experts: [E, d, f] -> experts over "model" (EP), d over FSDP
+
+Non-divisible cases (e.g. 40 heads over 16-way model axis) rely on XLA SPMD
+padding; the waste is visible in the roofline's MODEL_FLOPS/HLO_FLOPs ratio
+and is discussed in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+#: data-parallel mesh axes (pod is just an outer DP ring across ICI/DCN)
+DP_AXES = ("pod", "data")
+
+
+def _axes(mesh: Mesh, *names: str | tuple | None):
+    """Filter axis names to the ones that exist in the mesh."""
+    out = []
+    for n in names:
+        if n is None:
+            out.append(None)
+        elif isinstance(n, tuple):
+            present = tuple(a for a in n if a in mesh.axis_names)
+            out.append(present if present else None)
+        else:
+            out.append(n if n in mesh.axis_names else None)
+    return out
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Global batch over every data-parallel axis present in the mesh."""
+    (dp,) = _axes(mesh, DP_AXES)
+    return P(dp)
+
+
+def param_spec(mesh: Mesh, kind: str, fsdp: bool) -> P:
+    """PartitionSpec for a parameter of the given logical kind."""
+    (dp,) = _axes(mesh, DP_AXES)
+    f = dp if fsdp else None
+    table = {
+        "embed":      P("model", None),        # [vocab, d]
+        "in_proj":    P(f, "model"),           # [d, hidden]
+        "out_proj":   P("model", f),           # [hidden, d]
+        "norm":       P(None),                 # [d]
+        "head":       P(f, "model"),           # [d, vocab]
+        "router":     P(f, None),              # [d, E]
+        "expert_in":  P("model", f, None),     # [E, d, f_ff]
+        "expert_out": P("model", None, f),     # [E, f_ff, d]
+        "vector_d":   P(None),                 # [d]-shaped gains/biases
+        "bias_ff":    P("model"),              # [f_ff]-shaped biases
+        "conv":       P(None, "model"),        # [K, d_inner]
+        "ssm_xproj":  P("model", None),        # [d_inner, r + 2N]
+        "ssm_dtproj": P(None, "model"),        # [r, d_inner]
+        "ssm_vec":    P("model"),              # [d_inner]-shaped
+        "ssm_a":      P("model", None),        # [d_inner, N]
+        "lowrank_in": P(f, None),              # [d, r]
+        "replicated": P(),
+    }
+    return table[kind]
+
+
+def constrain(x: jax.Array, mesh: Mesh, *spec) -> jax.Array:
+    """with_sharding_constraint with mesh-aware axis filtering."""
+    spec = tuple(_axes(mesh, *spec))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def make_param_shardings(mesh: Mesh, kinds: Any, fsdp: bool = False) -> Any:
+    """Map a pytree of logical kinds to NamedShardings.
+
+    ``kinds`` mirrors the params tree, each leaf one of the table keys above;
+    a 'stack:<kind>' leaf is a layer-stacked [L, ...] parameter and gets a
+    leading unsharded dim.
+    """
+    def one(kind: str) -> NamedSharding:
+        if kind.startswith("stack:"):
+            base = param_spec(mesh, kind.split(":", 1)[1], fsdp)
+            return NamedSharding(mesh, P(None, *base))
+        return NamedSharding(mesh, param_spec(mesh, kind, fsdp))
+
+    return jax.tree.map(one, kinds)

@@ -1,0 +1,1 @@
+from .workloads import make_job, J60, J80, J100, ED200  # noqa: F401

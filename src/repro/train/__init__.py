@@ -1,0 +1,2 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from .steps import TrainState, make_serve_step, make_train_step  # noqa: F401

@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches must see ONE device; only launch/dryrun.py forces
+# 512 host devices (and only in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import sys  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

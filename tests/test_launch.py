@@ -1,0 +1,83 @@
+"""Launch-layer units: HLO collective parser, cell specs, batched ILS."""
+import numpy as np
+import jax
+import pytest
+
+from repro.launch.hlo_analysis import parse_collectives
+
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ar = f32[128,256] all-reduce(%x), replica_groups=[32,16]<=[512]
+  %ag = bf16[2048,64] all-gather(%y), replica_groups=[16,32]<=[512], dimensions={0}
+  %rs = f32[64] reduce-scatter(%z), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = bf16[32,32] collective-permute(%w), source_target_pairs={{0,1}}
+  %done = f32[128,256] all-reduce-done(%ar2)
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    st = parse_collectives(HLO_SAMPLE)
+    assert st.count == 4                      # -done lines excluded
+    ar = 128 * 256 * 4
+    ag = 2048 * 64 * 2 / 32                   # operand = result / group
+    rs = 64 * 4 * 4                           # operand = result * group
+    cp = 32 * 32 * 2
+    assert st.operand_bytes == pytest.approx(ar + ag + rs + cp)
+    assert st.by_op["all-reduce"] == pytest.approx(ar)
+    assert st.wire_bytes > 0
+
+
+def test_parse_collectives_async_start():
+    txt = "%s = bf16[64,64] all-gather-start(%x), replica_groups=[8,2]<=[16]"
+    st = parse_collectives(txt)
+    assert st.count == 1
+    assert st.operand_bytes == pytest.approx(64 * 64 * 2 / 2)
+
+
+def test_make_cell_lowers_on_host_mesh():
+    """Cell construction + lowering works on a degenerate 1x1 mesh (the
+    512-device version is exercised by launch/dryrun.py)."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.specs import make_cell
+    mesh = make_host_mesh()
+    cell = make_cell("musicgen-large", "decode_32k", mesh)
+    with mesh:
+        lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                          out_shardings=cell.out_shardings,
+                          donate_argnums=cell.donate).lower(*cell.args)
+    assert "while" in lowered.as_text().lower()
+
+
+def test_cells_for_skips_long_for_full_attention():
+    from repro.configs import get_config
+    from repro.configs.shapes import cells_for, skipped_for
+    dense = get_config("starcoder2-7b")
+    assert [s.name for s in cells_for(dense)] == \
+        ["train_4k", "prefill_32k", "decode_32k"]
+    assert skipped_for(dense)
+    rwkv = get_config("rwkv6-7b")
+    assert "long_500k" in [s.name for s in cells_for(rwkv)]
+    assert not skipped_for(rwkv)
+
+
+def test_batched_ils_improves_over_seed():
+    from repro.core.dspot import compute_dspot
+    from repro.core.evaluator import CachedEvaluator
+    from repro.core.ils_jax import BatchedILSParams, run_batched_ils
+    from repro.core.types import CloudConfig
+    from repro.sim.workloads import make_job
+
+    cfg = CloudConfig()
+    job = make_job("J60")
+    pool = cfg.instance_pool()
+    dspot = compute_dspot(job.deadline_s, job.tasks, cfg)
+    res = run_batched_ils(job.tasks, pool, cfg, dspot, job.deadline_s,
+                          BatchedILSParams(population=8, iterations=10,
+                                           proposals=8, seed=0))
+    assert np.isfinite(res.fitness_bound)
+    assert res.history[-1] <= res.history[0] + 1e-9
+    # the winner re-validates with the exact packer
+    ev = CachedEvaluator(job.tasks, cfg, job.deadline_s)
+    assert np.isfinite(ev.fitness(res.solution, dspot * 1.3))

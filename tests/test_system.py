@@ -1,0 +1,38 @@
+"""End-to-end behaviour: the paper's full pipeline on every workload."""
+import pytest
+
+from repro.core.dynamic import BURST_HADS, HADS, ILS_ONDEMAND
+from repro.core.ils import ILSParams
+from repro.core.types import CloudConfig
+from repro.sim.events import SCENARIOS, SC_NONE
+from repro.sim.simulator import simulate
+from repro.sim.workloads import ALL_JOBS, make_job
+
+CFG = CloudConfig()
+FAST = ILSParams(max_iteration=15, max_attempt=10, seed=2)
+
+
+@pytest.mark.parametrize("job_name", ALL_JOBS)
+def test_all_paper_jobs_schedule_and_complete(job_name):
+    job = make_job(job_name)
+    r = simulate(job, CFG, BURST_HADS, SC_NONE, seed=0, params=FAST)
+    assert r.deadline_met and r.unfinished == 0
+
+
+def test_paper_headline_trends_j80():
+    """Table IV/VI directional claims on J80 under the average scenario."""
+    job = make_job("J80")
+    rb = simulate(job, CFG, BURST_HADS, SCENARIOS["sc5"], seed=4,
+                  params=FAST)
+    rh = simulate(job, CFG, HADS, SCENARIOS["sc5"], seed=4, params=FAST)
+    ro = simulate(job, CFG, ILS_ONDEMAND, SC_NONE, seed=4, params=FAST)
+    assert rb.deadline_met
+    assert rb.makespan < rh.makespan          # Burst-HADS cuts makespan
+    assert rb.cost < ro.cost                  # and undercuts on-demand cost
+
+
+def test_ed200_memory_pressure():
+    """ED200 tasks are ~170MB; packing must respect VM memory."""
+    job = make_job("ED200")
+    r = simulate(job, CFG, BURST_HADS, SC_NONE, seed=0, params=FAST)
+    assert r.deadline_met and r.unfinished == 0

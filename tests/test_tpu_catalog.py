@@ -1,0 +1,33 @@
+"""Catalog-agnosticism: the full pipeline on the TPU-slice fleet."""
+from repro.cluster.catalog import tpu_cloud_config
+from repro.core.dynamic import BURST_HADS
+from repro.core.ils import ILSParams
+from repro.core.types import Job, TaskSpec
+from repro.sim.events import SCENARIOS
+from repro.sim.simulator import simulate
+
+
+def _bag(n=12):
+    # n training work-items, ~20 min each on the reference v5e-8 slice
+    return Job(name="tpu-bag",
+               tasks=tuple(TaskSpec(tid=i, memory_mb=64 * 1024,
+                                    base_time=1200.0) for i in range(n)),
+               deadline_s=7200.0)
+
+
+def test_tpu_fleet_schedules_and_completes():
+    cfg = tpu_cloud_config()
+    r = simulate(_bag(), cfg, BURST_HADS, SCENARIOS["none"], seed=0,
+                 params=ILSParams(max_iteration=15, max_attempt=10, seed=0))
+    assert r.deadline_met and r.unfinished == 0
+    assert r.cost > 0
+
+
+def test_tpu_fleet_survives_preemptions():
+    cfg = tpu_cloud_config()
+    for seed in (0, 1):
+        r = simulate(_bag(), cfg, BURST_HADS, SCENARIOS["sc2"], seed=seed,
+                     params=ILSParams(max_iteration=15, max_attempt=10,
+                                      seed=0))
+        assert r.deadline_met, (seed, r.makespan)
+        assert r.unfinished == 0
