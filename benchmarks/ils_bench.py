@@ -1,8 +1,13 @@
 """ILS search benchmark: sequential (paper) vs batched JAX/Pallas (ours).
 
-Measures evaluations/second and best fitness at equal wall-clock — the
-DESIGN.md §2.1 claim that the population search dominates the sequential
-chain on parallel hardware.
+Measures evaluations/second and solution quality at equal iteration count —
+the DESIGN.md §2.1 claims that (a) the population search dominates the
+sequential chain on parallel hardware and (b) the fused delta-evaluation
+``scan`` engine dominates the full-re-evaluation ``step`` engine without
+changing the search trajectory (both engines share one proposal stream).
+
+Batched engines are timed warm (one compile run first): the artifact tracks
+steady-state search throughput, not XLA compile time.
 """
 from __future__ import annotations
 
@@ -16,34 +21,74 @@ from repro.core.types import CloudConfig
 from repro.sim.workloads import make_job
 
 
-def run(job_name: str = "J100", budget_s: float = 8.0) -> list[dict]:
+def _timed_batched(job, pool, cfg, dspot, params):
+    args = (job.tasks, pool, cfg, dspot, job.deadline_s, params)
+    run_batched_ils(*args)                      # compile/warm-up
+    t0 = time.time()
+    res = run_batched_ils(*args)
+    return res, time.time() - t0
+
+
+def run(job_name: str = "J100", iterations: int = 40,
+        population: int = 32, proposals: int = 16) -> list[dict]:
     cfg = CloudConfig()
     job = make_job(job_name)
     pool = cfg.instance_pool()
     dspot = compute_dspot(job.deadline_s, job.tasks, cfg)
+    ev = CachedEvaluator(job.tasks, cfg, job.deadline_s)
 
     t0 = time.time()
     seq = run_ils(job.tasks, pool, cfg, dspot, job.deadline_s,
-                  ILSParams(max_iteration=40, max_attempt=25, seed=0))
+                  ILSParams(max_iteration=iterations, max_attempt=25,
+                            seed=0))
     seq_t = time.time() - t0
 
-    t0 = time.time()
-    bat = run_batched_ils(job.tasks, pool, cfg, dspot, job.deadline_s,
-                          BatchedILSParams(population=32, iterations=40,
-                                           proposals=16, seed=0))
-    bat_t = time.time() - t0
+    mk = lambda engine: BatchedILSParams(
+        population=population, iterations=iterations, proposals=proposals,
+        seed=0, engine=engine)
+    full, full_t = _timed_batched(job, pool, cfg, dspot, mk("step"))
+    delta, delta_t = _timed_batched(job, pool, cfg, dspot, mk("scan"))
 
-    ev = CachedEvaluator(job.tasks, cfg, job.deadline_s)
-    bat_exact = ev.fitness(bat.solution, dspot * 1.3)
+    full_eps = full.evaluations / full_t
+    delta_eps = delta.evaluations / delta_t
     return [{
         "table": "ils_bench", "job": job_name,
+        "population": population, "iterations": iterations,
         "seq_time_s": round(seq_t, 2), "seq_evals": seq.evaluations,
         "seq_evals_per_s": round(seq.evaluations / seq_t),
         "seq_fitness": round(seq.fitness, 4),
-        "batched_time_s": round(bat_t, 2), "batched_evals": bat.evaluations,
-        "batched_evals_per_s": round(bat.evaluations / bat_t),
-        "batched_bound": round(bat.fitness_bound, 4),
-        "batched_exact_fitness": round(float(bat_exact), 4),
-        "speedup_evals_per_s": round(
-            (bat.evaluations / bat_t) / (seq.evaluations / seq_t), 1),
+        "full_time_s": round(full_t, 2),
+        "full_evals_per_s": round(full_eps),
+        "full_bound": round(full.fitness_bound, 4),
+        "full_exact_fitness": round(
+            float(ev.fitness(full.solution, dspot * 1.3)), 4),
+        "delta_time_s": round(delta_t, 2),
+        "delta_evals_per_s": round(delta_eps),
+        "delta_bound": round(delta.fitness_bound, 4),
+        "delta_exact_fitness": round(
+            float(ev.fitness(delta.solution, dspot * 1.3)), 4),
+        "speedup_delta_vs_full": round(delta_eps / full_eps, 1),
+        "speedup_delta_vs_seq": round(
+            delta_eps / (seq.evaluations / seq_t), 1),
     }]
+
+
+def population_sweep(job_name: str = "J100", iterations: int = 20,
+                     populations: tuple[int, ...] = (8, 32, 128)
+                     ) -> list[dict]:
+    """Scaling of the scan engine's throughput with population size."""
+    cfg = CloudConfig()
+    job = make_job(job_name)
+    pool = cfg.instance_pool()
+    dspot = compute_dspot(job.deadline_s, job.tasks, cfg)
+    rows = []
+    for p in populations:
+        res, t = _timed_batched(
+            job, pool, cfg, dspot,
+            BatchedILSParams(population=p, iterations=iterations, seed=0,
+                             engine="scan"))
+        rows.append({"table": "ils_pop_sweep", "job": job_name,
+                     "population": p,
+                     "evals_per_s": round(res.evaluations / t),
+                     "bound": round(res.fitness_bound, 4)})
+    return rows

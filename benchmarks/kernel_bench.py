@@ -68,12 +68,42 @@ def run() -> list[dict]:
     mem = jnp.full((v_,), 3840.0)
     price = jnp.asarray(rng.uniform(1e-5, 6e-5, v_), jnp.float32)
     spot = jnp.asarray(rng.integers(0, 2, v_), jnp.float32)
+    kw = dict(dspot=2240.0, deadline=2700.0, alpha=0.5, cost_scale=0.2,
+              boot_s=60.0)
     fit = jax.jit(lambda a: population_fitness_ref(
-        a, e, rm, cores, mem, price, spot, dspot=2240.0, deadline=2700.0,
-        alpha=0.5, cost_scale=0.2, boot_s=60.0))
+        a, e, rm, cores, mem, price, spot, **kw))
     us = _time(fit, alloc)
     rows.append({"table": "kernels", "kernel": "sched_fitness",
                  "shape": f"P{p_} B{b_} V{v_}",
                  "us_per_call": round(us),
                  "evals_per_s": round(p_ / (us / 1e6))})
+
+    # delta vs full candidate scoring (interpret-mode Pallas, the ILS step):
+    # P chains x K proposals, full path re-reduces [P*K, B], delta path
+    # splices C=n+1 re-reduced columns into once-per-step base reductions.
+    from repro.kernels.sched_fitness.ops import (delta_fitness,
+                                                 population_fitness)
+    from repro.kernels.sched_fitness.ref import apply_moves
+    from repro.kernels.sched_fitness.sched_fitness import population_reduce
+    k_, n_ = 16, 4
+    for pop in (8, 32, 128):
+        al = jnp.asarray(rng.integers(0, v_, (pop, b_)), jnp.int32)
+        t_idx = jnp.asarray(rng.integers(0, b_, (pop, k_, n_)), jnp.int32)
+        dst = jnp.asarray(rng.integers(0, v_, (pop, k_)), jnp.int32)
+        cand = apply_moves(al, t_idx, dst).reshape(pop * k_, b_)
+        full_fn = lambda c: population_fitness(
+            c, e, rm, cores, mem, price, spot, **kw, interpret=True)[0]
+        base = population_reduce(al, e, rm, interpret=True)
+        delta_fn = lambda t: delta_fitness(
+            al, t, dst, base, e, rm, cores, mem, price, spot, **kw,
+            interpret=True)[0]
+        full_us = _time(full_fn, cand)
+        delta_us = _time(delta_fn, t_idx)
+        rows.append({"table": "kernels", "kernel": "sched_fitness_delta",
+                     "shape": f"P{pop} K{k_} n{n_} B{b_} V{v_}",
+                     "full_us": round(full_us),
+                     "delta_us": round(delta_us),
+                     "full_evals_per_s": round(pop * k_ / (full_us / 1e6)),
+                     "delta_evals_per_s": round(pop * k_ / (delta_us / 1e6)),
+                     "speedup": round(full_us / delta_us, 1)})
     return rows

@@ -6,6 +6,7 @@ Prints ``name,key=value,...`` CSV-ish lines per row.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -54,8 +55,21 @@ def main() -> None:
     from benchmarks import stress_ablation
     emit(stress_ablation.run("J60" if args.fast else "J80"), fh)
 
-    print("# ILS search: sequential vs batched JAX")
-    emit(ils_bench.run("J60" if args.fast else "J100"), fh)
+    print("# ILS search: sequential vs batched JAX (full vs delta engine)")
+    ils_rows = ils_bench.run("J60" if args.fast else "J100")
+    emit(ils_rows, fh)
+    if not args.fast:
+        print("# ILS population sweep (scan engine)")
+        ils_rows += ils_bench.population_sweep("J100")
+        emit([r for r in ils_rows if r["table"] == "ils_pop_sweep"], fh)
+    # perf-trajectory artifact, tracked across PRs (DESIGN.md §2.1)
+    bench_json = os.path.join(os.path.dirname(args.csv) or ".",
+                              "BENCH_ils.json")
+    with open(bench_json, "w") as jf:
+        json.dump({"generated_by": "benchmarks/run.py",
+                   "unix_time": round(time.time()), "rows": ils_rows},
+                  jf, indent=2)
+    print(f"# ILS artifact -> {bench_json}")
     print("# Kernel microbenches (CPU reference paths)")
     emit(kernel_bench.run(), fh)
 

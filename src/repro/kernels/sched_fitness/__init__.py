@@ -1,2 +1,3 @@
-from .ops import population_fitness  # noqa: F401
-from .ref import population_fitness_ref  # noqa: F401
+from .ops import delta_fitness, population_fitness  # noqa: F401
+from .ref import delta_fitness_ref, population_fitness_ref  # noqa: F401
+from .sched_fitness import population_reduce  # noqa: F401

@@ -1,4 +1,9 @@
-"""jit'd wrapper: Pallas reductions + jnp fitness finalisation."""
+"""jit'd wrappers: Pallas reductions + jnp fitness finalisation.
+
+``population_fitness`` re-reduces the full [B, V] problem per candidate;
+``delta_fitness`` scores candidate *moves* against once-per-iteration base
+reductions, re-reducing only the touched VM columns (DESIGN.md §2.1).
+"""
 from __future__ import annotations
 
 import functools
@@ -6,7 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .sched_fitness import population_reduce
+from .sched_fitness import delta_population_fitness, population_reduce
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -34,3 +39,24 @@ def population_fitness(alloc, e, rm, vm_cores, vm_mem, vm_price, vm_is_spot,
     fit = alpha * cost / cost_scale + (1 - alpha) * mkp / deadline
     bad = mem_bad | time_bad
     return jnp.where(bad, jnp.inf, fit), cost, mkp
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def delta_fitness(alloc, t_idx, dest, base, e, rm, vm_cores, vm_mem,
+                  vm_price, vm_is_spot, *, dspot, deadline, alpha,
+                  cost_scale, boot_s, interpret: bool = True):
+    """Fitness of P·K candidate moves, evaluated incrementally (Eq. 8).
+
+    ``alloc`` [P, B] is the incumbent; candidate (p, k) relocates tasks
+    ``t_idx[p, k, :]`` to VM ``dest[p, k]``.  ``base`` is the 4-tuple of
+    [P, V] reductions of ``alloc`` from ``population_reduce`` — computed
+    once per iteration, not per candidate.  Returns (fitness [P, K],
+    cost [P, K], makespan [P, K]); identical semantics to calling
+    ``population_fitness`` on the materialised candidates.
+    """
+    limit = jnp.where(vm_is_spot > 0, dspot, deadline).astype(jnp.float32)
+    params = jnp.stack([jnp.asarray(x, jnp.float32)
+                        for x in (alpha, cost_scale, boot_s, deadline)])
+    return delta_population_fitness(alloc, t_idx, dest, base, e, rm,
+                                    vm_cores, vm_mem, vm_price, limit,
+                                    params, interpret=interpret)

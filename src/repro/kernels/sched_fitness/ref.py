@@ -44,3 +44,31 @@ def population_fitness_ref(alloc, e, rm, vm_cores, vm_mem, vm_price,
     fit = alpha * cost / cost_scale + (1 - alpha) * mkp / deadline
     bad = mem_bad | time_bad
     return jnp.where(bad, jnp.inf, fit), cost, mkp
+
+
+def apply_moves(alloc: jax.Array, t_idx: jax.Array, dest: jax.Array
+                ) -> jax.Array:
+    """Materialise the [P, K, B] candidates the delta path never builds:
+    candidate (p, k) = alloc[p] with tasks t_idx[p, k, :] sent to
+    dest[p, k] (duplicate task ids are harmless — same destination)."""
+    p, b = alloc.shape
+    _, k, n = t_idx.shape
+    cand = jnp.broadcast_to(alloc[:, None], (p, k, b))
+    pi = jax.lax.broadcasted_iota(jnp.int32, (p, k, n), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (p, k, n), 1)
+    return cand.at[pi, ki, t_idx].set(
+        jnp.broadcast_to(dest[:, :, None], (p, k, n)))
+
+
+def delta_fitness_ref(alloc, t_idx, dest, e, rm, vm_cores, vm_mem, vm_price,
+                      vm_is_spot, *, dspot, deadline, alpha, cost_scale,
+                      boot_s):
+    """Oracle for the incremental path: full re-evaluation of every
+    materialised candidate.  Returns (fitness, cost, makespan) [P, K]."""
+    p, b = alloc.shape
+    _, k, _ = t_idx.shape
+    cand = apply_moves(alloc, t_idx, dest).reshape(p * k, b)
+    fit, cost, mkp = population_fitness_ref(
+        cand, e, rm, vm_cores, vm_mem, vm_price, vm_is_spot, dspot=dspot,
+        deadline=deadline, alpha=alpha, cost_scale=cost_scale, boot_s=boot_s)
+    return fit.reshape(p, k), cost.reshape(p, k), mkp.reshape(p, k)

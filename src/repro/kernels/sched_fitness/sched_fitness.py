@@ -1,13 +1,25 @@
-"""Pallas TPU kernel: population scheduling-fitness reductions.
+"""Pallas TPU kernels: population scheduling-fitness reductions.
 
 The ILS hot-spot is evaluating thousands of candidate allocation vectors per
 step (DESIGN.md §2.1).  The MXU is useless here (integer compare/select
-reductions), so the kernel targets the VPU: one [pb, V] accumulator set in
-VMEM per population tile, streaming task tiles; the VM axis (padded to the
-128-lane register width) is the minor dimension.
+reductions), so both kernels target the VPU.
 
-Grid: (P / pb, B / tb) — the task axis is the *sequential* minor grid dim so
-output tiles are revisited and accumulated in place.
+``population_reduce`` — the full path: one [pb, V] accumulator set in VMEM
+per population tile, streaming task tiles; the VM axis (padded to the
+128-lane register width) is the minor dimension.  Grid: (P / pb, B / tb) —
+the task axis is the *sequential* minor grid dim so output tiles are
+revisited and accumulated in place.
+
+``delta_population_fitness`` — the incremental path: a candidate move only
+touches its n source columns plus one destination column, so instead of
+re-reducing the whole [B, V] problem per candidate it re-reduces just those
+C = n + 1 columns (streamed over task tiles), splices them into the
+once-per-iteration base reductions, and finalises Eq. 8 in-kernel.  Work per
+candidate drops from O(B·V) to O(C·B + V); candidate allocation vectors
+([P, K, B]) are never built — the path's footprint is the gathered
+e-columns tensor, O(P·K·C·B) f32, traded for the V-fold compute win.
+Grid: (P / pb, B / tb); per-chain the K proposals ride in the block's
+second dimension.
 """
 from __future__ import annotations
 
@@ -16,8 +28,16 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 LANE = 128   # TPU vector lane width; V is padded to this
+
+
+def _pad_vms(v: int) -> int:
+    """Pad the VM axis to the lane width, always reserving >= 1 pad column
+    (padded tasks are parked on column ``v_pad - 1``, which must not be a
+    real VM even when V is an exact lane multiple)."""
+    return ((v + LANE) // LANE) * LANE
 
 
 def _kernel(alloc_ref, e_ref, rm_ref, loads_ref, maxe_ref, cnt_ref,
@@ -55,7 +75,7 @@ def population_reduce(alloc: jax.Array, e: jax.Array, rm: jax.Array,
     v = e.shape[1]
     # pad: V to LANE (mapping padded tasks to a padded VM column), B to tb,
     # P to pb
-    v_pad = max(LANE, ((v + LANE - 1) // LANE) * LANE)
+    v_pad = _pad_vms(v)
     b_pad = ((b + tb - 1) // tb) * tb
     p_pad = ((p + pb - 1) // pb) * pb
     alloc = jnp.pad(alloc, ((0, p_pad - p), (0, b_pad - b)),
@@ -78,3 +98,154 @@ def population_reduce(alloc: jax.Array, e: jax.Array, rm: jax.Array,
         interpret=interpret,
     )(alloc, e, rm)
     return (loads[:p, :v], maxe[:p, :v], cnt[:p, :v], maxmem[:p, :v])
+
+
+def _delta_kernel(alloc_ref, ecols_ref, rm_ref, m_ref, cols_ref,
+                  bl_ref, bx_ref, bc_ref, bm_ref,
+                  cores_ref, mem_ref, price_ref, limit_ref, par_ref,
+                  fit_ref, cost_ref, mkp_ref,
+                  sl, sx, sc, sm):
+    """Incremental candidate scoring for a tile of pb population chains.
+
+    Streams task tiles (sequential grid dim 1) and re-reduces only the
+    C = n + 1 columns each candidate touches into [pb, Kp, C] scratch; the
+    last tile splices them into each chain's base [V] rows and finalises
+    Eq. 8.
+    """
+    j = pl.program_id(1)
+    pb, kp, c = cols_ref.shape
+    tb = alloc_ref.shape[1]
+
+    @pl.when(j == 0)
+    def _init():
+        sl[...] = jnp.zeros_like(sl)
+        sx[...] = jnp.zeros_like(sx)
+        sc[...] = jnp.zeros_like(sc)
+        sm[...] = jnp.zeros_like(sm)
+
+    alloc = alloc_ref[...]                        # [pb, tb] int32
+    ecols = ecols_ref[...].reshape(pb, kp, c, tb)  # e[t, cols[p, k, c]]
+    rm = rm_ref[...]                              # [1, tb]
+    m = m_ref[...]                                # [pb, Kp, n] moved tasks
+    cols = cols_ref[...]                          # [pb, Kp, C]; C-1 = dest
+
+    # new occupancy of column cols[p, k, c] under candidate (p, k), this
+    # task tile: a task sits there iff it stayed (assigned and not moved)
+    # or the column is the destination and the task was moved there.
+    t_glob = j * tb + jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, tb), 3)
+    moved = jnp.any(m[..., None] == t_glob, axis=2)           # [pb, Kp, tb]
+    is_dest = (cols == cols[:, :, c - 1:c])[..., None]        # [pb,Kp,C,1]
+    stay = (alloc[:, None, None, :] == cols[..., None]) & ~moved[:, :, None]
+    on = (stay | (moved[:, :, None] & is_dest)).astype(ecols.dtype)
+
+    sl[...] += jnp.sum(on * ecols, axis=3)
+    sc[...] += jnp.sum(on, axis=3)
+    sx[...] = jnp.maximum(sx[...], jnp.max(on * ecols, axis=3))
+    sm[...] = jnp.maximum(sm[...], jnp.max(on * rm[None, None], axis=3))
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalise():
+        vp = bl_ref.shape[1]
+        viota = jax.lax.broadcasted_iota(jnp.int32, (pb, kp, vp), 2)
+        rows_l = jnp.broadcast_to(bl_ref[...][:, None], (pb, kp, vp))
+        rows_x = jnp.broadcast_to(bx_ref[...][:, None], (pb, kp, vp))
+        rows_c = jnp.broadcast_to(bc_ref[...][:, None], (pb, kp, vp))
+        rows_m = jnp.broadcast_to(bm_ref[...][:, None], (pb, kp, vp))
+        slv, sxv, scv, smv = sl[...], sx[...], sc[...], sm[...]
+        for i in range(c):    # splice the C re-reduced columns (duplicates
+            msk = viota == cols[:, :, i][..., None]  # carry equal values)
+            rows_l = jnp.where(msk, slv[:, :, i][..., None], rows_l)
+            rows_x = jnp.where(msk, sxv[:, :, i][..., None], rows_x)
+            rows_c = jnp.where(msk, scv[:, :, i][..., None], rows_c)
+            rows_m = jnp.where(msk, smv[:, :, i][..., None], rows_m)
+
+        alpha, scale = par_ref[0, 0], par_ref[0, 1]
+        boot_s, deadline = par_ref[0, 2], par_ref[0, 3]
+        cores = cores_ref[...][None]               # [1, 1, vp]
+        busy = rows_c > 0
+        mksp = jnp.where(
+            busy, jnp.maximum(rows_l / cores, rows_x) + boot_s, 0.0)
+        mem_peak = rows_m * jnp.minimum(rows_c, cores)
+        mem_bad = jnp.any(mem_peak > mem_ref[...][None] + 1e-6, axis=2)
+        time_bad = jnp.any(mksp > limit_ref[...][None] + 1e-6, axis=2)
+        cost = jnp.sum(price_ref[...][None] * jnp.maximum(mksp - boot_s,
+                                                          0.0), axis=2)
+        mkp = jnp.max(mksp, axis=2)
+        fit = alpha * cost / scale + (1 - alpha) * mkp / deadline
+        fit_ref[...] = jnp.where(mem_bad | time_bad, jnp.inf, fit)
+        cost_ref[...] = cost
+        mkp_ref[...] = mkp
+
+
+@functools.partial(jax.jit, static_argnames=("pb", "tb", "interpret"))
+def delta_population_fitness(alloc: jax.Array, t_idx: jax.Array,
+                             dest: jax.Array, base, e: jax.Array,
+                             rm: jax.Array, vm_cores, vm_mem, vm_price,
+                             limit, params, *, pb: int = 8, tb: int = 128,
+                             interpret: bool = False):
+    """Score P·K candidate moves incrementally against base reductions.
+
+    alloc int32 [P, B]; t_idx int32 [P, K, n] (task ids relocated per
+    candidate); dest int32 [P, K]; base = (loads, maxe, cnt, maxmem) each
+    f32 [P, V] for ``alloc`` (from ``population_reduce``); limit f32 [V] is
+    the per-VM finish deadline; params f32 [4] = (alpha, cost_scale, boot_s,
+    deadline).  Returns (fitness, cost, makespan) each f32 [P, K].
+    """
+    p, b = alloc.shape
+    _, k, n = t_idx.shape
+    v = e.shape[1]
+    c = n + 1
+    v_pad = _pad_vms(v)
+    b_pad = ((b + tb - 1) // tb) * tb
+    p_pad = ((p + pb - 1) // pb) * pb
+    k_pad = ((k + 7) // 8) * 8
+
+    pi = jnp.arange(p)[:, None, None]
+    src = alloc[pi, t_idx]                                    # [P, K, n]
+    cols = jnp.concatenate([src, dest[:, :, None]], axis=2)   # [P, K, C]
+    pad_pk = ((0, p_pad - p), (0, k_pad - k), (0, 0))
+    cols = jnp.pad(cols, pad_pk,
+                   constant_values=v_pad - 1)    # pad candidates -> pad VM
+    m = jnp.pad(t_idx, pad_pk, constant_values=b_pad - 1)
+
+    ep = jnp.pad(e.astype(jnp.float32), ((0, b_pad - b), (0, v_pad - v)))
+    ecols = ep.T[cols].reshape(p_pad, k_pad * c, b_pad)  # one O(PKCB) gather
+    alloc_p = jnp.pad(alloc, ((0, p_pad - p), (0, b_pad - b)),
+                      constant_values=v_pad - 1)
+    rm_p = jnp.pad(rm.astype(jnp.float32), (0, b_pad - b))[None]
+
+    pad_v = ((0, p_pad - p), (0, v_pad - v))
+    bl, bx, bc, bm = (jnp.pad(x.astype(jnp.float32), pad_v) for x in base)
+    cores = jnp.pad(vm_cores.astype(jnp.float32), (0, v_pad - v),
+                    constant_values=1.0)[None]   # 1.0: keep pad cols /-safe
+    memv = jnp.pad(vm_mem.astype(jnp.float32), (0, v_pad - v))[None]
+    price = jnp.pad(vm_price.astype(jnp.float32), (0, v_pad - v))[None]
+    limit = jnp.pad(limit.astype(jnp.float32), (0, v_pad - v))[None]
+    par = jnp.zeros((1, LANE), jnp.float32).at[0, :4].set(
+        params.astype(jnp.float32))
+
+    grid = (p_pad // pb, b_pad // tb)
+    row_spec = pl.BlockSpec((pb, v_pad), lambda i, j: (i, 0))
+    vm_spec = pl.BlockSpec((1, v_pad), lambda i, j: (0, 0))
+    out_spec = pl.BlockSpec((pb, k_pad), lambda i, j: (i, 0))
+    fit, cost, mkp = pl.pallas_call(
+        _delta_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((pb, tb), lambda i, j: (i, j)),           # alloc
+            pl.BlockSpec((pb, k_pad * c, tb), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, tb), lambda i, j: (0, j)),            # rm
+            pl.BlockSpec((pb, k_pad, n), lambda i, j: (i, 0, 0)),  # moved
+            pl.BlockSpec((pb, k_pad, c), lambda i, j: (i, 0, 0)),  # cols
+            row_spec, row_spec, row_spec, row_spec,                # base
+            vm_spec, vm_spec, vm_spec, vm_spec,                    # vm data
+            pl.BlockSpec((1, LANE), lambda i, j: (0, 0)),          # params
+        ],
+        out_specs=[out_spec] * 3,
+        out_shape=[jax.ShapeDtypeStruct((p_pad, k_pad), jnp.float32)] * 3,
+        scratch_shapes=[pltpu.VMEM((pb, k_pad, c), jnp.float32)
+                        for _ in range(4)],
+        interpret=interpret,
+    )(alloc_p, ecols, rm_p, m, cols, bl, bx, bc, bm,
+      cores, memv, price, limit, par)
+    return fit[:p, :k], cost[:p, :k], mkp[:p, :k]

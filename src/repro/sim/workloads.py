@@ -12,6 +12,9 @@ Table IV's 1887 s — the constant is flagged here per DESIGN.md §5(6).
 """
 from __future__ import annotations
 
+import re
+import zlib
+
 import numpy as np
 
 from repro.core.types import Job, TaskSpec
@@ -44,14 +47,16 @@ def _ed_tasks(n: int, rng: np.random.Generator) -> list[TaskSpec]:
 
 def make_job(name: str, seed: int = 0,
              deadline_s: float = PAPER_DEADLINE_S) -> Job:
-    rng = np.random.default_rng(seed + hash(name) % (2 ** 16))
-    if name.upper() in ("J60", "J80", "J100"):
-        n = int(name[1:])
-        tasks = _synthetic_tasks(n, rng)
+    # crc32, not hash(): salted str hashes would give every *process* a
+    # different instance, making perf artifacts incomparable across runs
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % (2 ** 16))
+    jn = re.fullmatch(r"J(\d+)", name.upper())
+    if jn:      # paper jobs are J60/J80/J100; larger J<n> scale the template
+        tasks = _synthetic_tasks(int(jn.group(1)), rng)
     elif name.upper() == "ED200":
         tasks = _ed_tasks(200, rng)
     else:
-        raise ValueError(f"unknown job {name!r} (J60/J80/J100/ED200)")
+        raise ValueError(f"unknown job {name!r} (J<n>/ED200)")
     return Job(name=name.upper(), tasks=tuple(tasks), deadline_s=deadline_s)
 
 

@@ -1,0 +1,82 @@
+"""Minimal, deterministic stand-in for ``hypothesis`` (property tests).
+
+The container image does not ship hypothesis, and tier-1 must not install
+packages.  This shim implements just the API surface the test-suite uses —
+``given``/``settings`` and the ``floats``/``integers``/``builds``/``lists``
+strategies (plus ``.map``) — running each property ``max_examples`` times
+with a seeded RNG, occasionally injecting interval endpoints the way
+hypothesis probes boundaries.  Assertions in the tests are untouched; only
+the example generator is simpler.  When hypothesis is installed the tests
+import the real library instead (see the try/except at their top).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_SEED = 0x5EED
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample           # rng -> value
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self.sample(rng)))
+
+
+class strategies:                      # mirrors `from hypothesis import st`
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        def sample(rng):
+            if rng.random() < 0.1:     # probe the interval endpoints
+                return float(min_value if rng.random() < 0.5 else max_value)
+            return float(rng.uniform(min_value, max_value))
+        return _Strategy(sample)
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def builds(fn, *args: _Strategy, **kwargs: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: fn(
+            *(a.sample(rng) for a in args),
+            **{k: v.sample(rng) for k, v in kwargs.items()}))
+
+    @staticmethod
+    def lists(elems: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def sample(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elems.sample(rng) for _ in range(size)]
+        return _Strategy(sample)
+
+
+def settings(max_examples: int = 20, **_ignored):
+    """Works whether applied above or below ``given`` (attribute is read
+    from both the wrapper and the wrapped function at call time)."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**param_strategies):
+    def deco(fn):
+        # No functools.wraps: pytest must see the zero-arg wrapper
+        # signature, not the property's drawn parameters (it would try to
+        # resolve them as fixtures).
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples", 20))
+            for i in range(n):
+                rng = np.random.default_rng(_SEED + 9973 * i)
+                drawn = {k: s.sample(rng)
+                         for k, s in param_strategies.items()}
+                fn(**drawn)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

@@ -1,7 +1,11 @@
 """Scheduler invariants: greedy, packer, ILS, burst allocation, D_spot."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # container has no hypothesis
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import (CloudConfig, ILSParams, burst_allocation,
                         compute_dspot, evaluate, initial_solution, run_ils)

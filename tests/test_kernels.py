@@ -8,8 +8,10 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.rwkv6.ops import wkv6
 from repro.kernels.rwkv6.ref import wkv6_ref
-from repro.kernels.sched_fitness.ops import population_fitness
-from repro.kernels.sched_fitness.ref import population_fitness_ref
+from repro.kernels.sched_fitness.ops import delta_fitness, population_fitness
+from repro.kernels.sched_fitness.ref import (apply_moves, delta_fitness_ref,
+                                             population_fitness_ref)
+from repro.kernels.sched_fitness.sched_fitness import population_reduce
 
 
 # ---------------------------------------------------------------- fitness
@@ -33,6 +35,132 @@ def test_sched_fitness_matches_ref(p, b, v):
     for g, w in zip(got, want):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w),
                                    rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------- delta fitness
+def _fitness_problem(rng, b, v):
+    e = jnp.asarray(rng.uniform(50, 400, (b, v)), jnp.float32)
+    rm = jnp.asarray(rng.uniform(2, 180, b), jnp.float32)
+    cores = jnp.asarray(rng.choice([2.0, 4.0], v))
+    mem = jnp.asarray(rng.uniform(3000, 8000, v), jnp.float32)
+    price = jnp.asarray(rng.uniform(1e-5, 6e-5, v), jnp.float32)
+    spot = jnp.asarray(rng.integers(0, 2, v), jnp.float32)
+    return e, rm, cores, mem, price, spot
+
+
+def _assert_delta_matches(got, want):
+    """Same inf (infeasibility) mask exactly; non-inf entries to 1e-5."""
+    for name, g, w in zip(("fitness", "cost", "makespan"), got, want):
+        g, w = np.asarray(g), np.asarray(w)
+        np.testing.assert_array_equal(np.isinf(g), np.isinf(w),
+                                      err_msg=f"{name}: inf masks differ")
+        fin = ~np.isinf(w)
+        np.testing.assert_allclose(g[fin], w[fin], rtol=1e-5, atol=1e-5,
+                                   err_msg=name)
+
+
+def _delta_vs_oracles(alloc, t_idx, dest, e, rm, cores, mem, price, spot,
+                      **kw):
+    base = population_reduce(alloc, e, rm, interpret=True)
+    got = delta_fitness(alloc, t_idx, dest, base, e, rm, cores, mem, price,
+                        spot, **kw, interpret=True)
+    want = delta_fitness_ref(alloc, t_idx, dest, e, rm, cores, mem, price,
+                             spot, **kw)
+    _assert_delta_matches(got, want)
+    # and against the full Pallas path on materialised candidates
+    p, b = alloc.shape
+    k = t_idx.shape[1]
+    cand = apply_moves(alloc, t_idx, dest).reshape(p * k, b)
+    full = population_fitness(cand, e, rm, cores, mem, price, spot, **kw,
+                              interpret=True)
+    _assert_delta_matches(got, [f.reshape(p, k) for f in full])
+    return got
+
+
+@pytest.mark.parametrize("p,b,v,k,n", [
+    (1, 1, 1, 1, 1),
+    (5, 33, 7, 3, 2),
+    (8, 100, 35, 16, 4),
+    (4, 200, 130, 5, 3),     # V > LANE and not a multiple of 128
+    (3, 64, 128, 4, 2),      # V exactly the lane width (pad-column case)
+])
+def test_delta_fitness_matches_oracles(p, b, v, k, n):
+    rng = np.random.default_rng(p * 1000 + b)
+    alloc = jnp.asarray(rng.integers(0, v, (p, b)), jnp.int32)
+    t_idx = jnp.asarray(rng.integers(0, b, (p, k, n)), jnp.int32)
+    dest = jnp.asarray(rng.integers(0, v, (p, k)), jnp.int32)
+    kw = dict(dspot=2240.0, deadline=2700.0, alpha=0.5, cost_scale=0.2,
+              boot_s=60.0)
+    _delta_vs_oracles(alloc, t_idx, dest,
+                      *_fitness_problem(rng, b, v), **kw)
+
+
+def test_delta_fitness_infeasibility_masks_agree():
+    """A mix of feasible and D_spot-violating candidates: the delta path
+    must agree with the oracle exactly on which candidates are inf."""
+    p, b, v, k, n = 6, 40, 20, 8, 4
+    rng = np.random.default_rng(3)
+    alloc = jnp.asarray(rng.integers(0, v, (p, b)), jnp.int32)
+    t_idx = jnp.asarray(rng.integers(0, b, (p, k, n)), jnp.int32)
+    dest = jnp.asarray(rng.integers(0, v, (p, k)), jnp.int32)
+    kw = dict(dspot=600.0, deadline=2700.0, alpha=0.5, cost_scale=0.2,
+              boot_s=60.0)
+    fit, _, _ = _delta_vs_oracles(alloc, t_idx, dest,
+                                  *_fitness_problem(rng, b, v), **kw)
+    infs = np.isinf(np.asarray(fit))
+    assert infs.any() and not infs.all()   # the mask check actually bites
+
+
+def test_delta_fitness_noop_move_keeps_base_fitness():
+    """Relocating tasks onto their current VM must reproduce the incumbent
+    fitness bit-for-bit semantics (feasibility) and to float tolerance."""
+    p, b, v, k, n = 4, 50, 12, 3, 2
+    rng = np.random.default_rng(11)
+    alloc = jnp.asarray(rng.integers(0, v, (p, b)), jnp.int32)
+    # every candidate moves n copies of one task to its own VM
+    t0 = jnp.asarray(rng.integers(0, b, (p, k, 1)), jnp.int32)
+    t_idx = jnp.broadcast_to(t0, (p, k, n))
+    dest = alloc[jnp.arange(p)[:, None], t0[:, :, 0]]
+    e, rm, cores, mem, price, spot = _fitness_problem(rng, b, v)
+    kw = dict(dspot=2240.0, deadline=2700.0, alpha=0.5, cost_scale=0.2,
+              boot_s=60.0)
+    base = population_reduce(alloc, e, rm, interpret=True)
+    fit, _, _ = delta_fitness(alloc, t_idx, dest, base, e, rm, cores, mem,
+                              price, spot, **kw, interpret=True)
+    fit0, _, _ = population_fitness(alloc, e, rm, cores, mem, price, spot,
+                                    **kw, interpret=True)
+    np.testing.assert_allclose(np.asarray(fit),
+                               np.tile(np.asarray(fit0)[:, None], (1, k)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_delta_fitness_emptied_vm():
+    """Moving every task off a VM: the source column must go idle (no boot
+    cost, no makespan contribution) exactly as in a full re-evaluation."""
+    p, b, v, k, n = 1, 3, 4, 1, 3
+    alloc = jnp.asarray([[2, 2, 2]], jnp.int32)       # all tasks on VM 2
+    t_idx = jnp.asarray([[[0, 1, 2]]], jnp.int32)     # ... all moved
+    dest = jnp.asarray([[0]], jnp.int32)              # ... to VM 0
+    rng = np.random.default_rng(21)
+    e, rm, cores, mem, price, spot = _fitness_problem(rng, b, v)
+    kw = dict(dspot=2240.0, deadline=2700.0, alpha=0.5, cost_scale=0.2,
+              boot_s=60.0)
+    _delta_vs_oracles(alloc, t_idx, dest, e, rm, cores, mem, price, spot,
+                      **kw)
+
+
+def test_delta_fitness_duplicate_move_tasks():
+    """Duplicate task ids within one candidate move are legal (the sampler
+    draws with replacement) and must count the task once, not n times."""
+    p, b, v, k, n = 2, 30, 9, 4, 4
+    rng = np.random.default_rng(5)
+    alloc = jnp.asarray(rng.integers(0, v, (p, b)), jnp.int32)
+    t_idx = jnp.asarray(rng.integers(0, 4, (p, k, n)), jnp.int32)  # dups
+    dest = jnp.asarray(rng.integers(0, v, (p, k)), jnp.int32)
+    kw = dict(dspot=2240.0, deadline=2700.0, alpha=0.5, cost_scale=0.2,
+              boot_s=60.0)
+    _delta_vs_oracles(alloc, t_idx, dest,
+                      *_fitness_problem(rng, b, v), **kw)
 
 
 # ---------------------------------------------------------------- flash
