@@ -78,6 +78,20 @@ def run() -> list[dict]:
                  "us_per_call": round(us),
                  "evals_per_s": round(p_ / (us / 1e6))})
 
+    # Monte-Carlo per-slot VM reduction (the dynamic-phase hot loop):
+    # per-scenario per-VM remaining-load/count/max in one pass over [S, B]
+    from repro.kernels.sched_fitness.ops import mc_vm_stats
+    from repro.kernels.sched_fitness.ref import mc_vm_stats_ref
+    s_, b2, v2 = 1024, 100, 35
+    assign = jnp.asarray(rng.integers(0, v2, (s_, b2)), jnp.int32)
+    remw = jnp.asarray(rng.uniform(0.0, 400.0, (s_, b2)), jnp.float32)
+    ref_fn = jax.jit(lambda a, w: mc_vm_stats_ref(a, w, v2))
+    pal_fn = lambda a, w: mc_vm_stats(a, w, v=v2, interpret=True)
+    rows.append({"table": "kernels", "kernel": "mc_vm_reduce",
+                 "shape": f"S{s_} B{b2} V{v2}",
+                 "ref_us": round(_time(ref_fn, assign, remw)),
+                 "interpret_us": round(_time(pal_fn, assign, remw))})
+
     # delta vs full candidate scoring (interpret-mode Pallas, the ILS step):
     # P chains x K proposals, full path re-reduces [P*K, B], delta path
     # splices C=n+1 re-reduced columns into once-per-step base reductions.

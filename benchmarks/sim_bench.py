@@ -1,0 +1,67 @@
+"""Dynamic-phase benchmark: looped numpy DES vs batched Monte-Carlo engine.
+
+Measures scenarios/second for the Table V hibernation sweep at S ∈
+{1, 64, 1024}: the DES replays one Poisson trace per python loop
+iteration; the MC engine advances all S scenarios in lockstep inside one
+jitted ``lax.while_loop`` (timed warm — the artifact tracks steady-state
+throughput).  Both run the *same* (job, plan, policy, scenario); the rows
+also carry mean cost/makespan from both engines so BENCH_sim.json doubles
+as a coarse distribution-parity record (the exact contract lives in
+tests/test_mc_engine.py).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.dynamic import BURST_HADS, build_primary_map
+from repro.core.ils import ILSParams
+from repro.core.types import CloudConfig
+from repro.sim.events import SCENARIOS
+from repro.sim.mc_engine import MCParams, run_mc
+from repro.sim.simulator import Simulator
+from repro.sim.workloads import make_job
+
+
+def run(job_name: str = "J60", scenario: str = "sc5",
+        sizes: tuple[int, ...] = (1, 64, 1024),
+        dts: tuple[float, ...] = (30.0, 60.0)) -> list[dict]:
+    cfg = CloudConfig()
+    job = make_job(job_name)
+    sc = SCENARIOS[scenario]
+    plan = build_primary_map(job, cfg, BURST_HADS,
+                             ILSParams(max_iteration=25, max_attempt=15,
+                                       seed=3))
+    rows = []
+    for s in sizes:
+        t0 = time.time()
+        des = [Simulator(job, plan, cfg, sc, seed=i).run() for i in range(s)]
+        des_t = max(time.time() - t0, 1e-9)
+        des_cost = float(np.mean([r.cost for r in des]))
+        des_mkp = float(np.mean([r.makespan for r in des]))
+        for dt in dts:
+            p = MCParams(n_scenarios=s, dt=dt, seed=0)
+            run_mc(job, plan, cfg, sc, p)            # compile / warm-up
+            t0 = time.time()
+            mc = run_mc(job, plan, cfg, sc, p)
+            mc_t = max(time.time() - t0, 1e-9)
+            rows.append({
+                "table": "sim_bench", "job": job_name, "scenario": scenario,
+                "s": s, "dt": dt,
+                "des_scen_per_s": round(s / des_t, 1),
+                "mc_scen_per_s": round(s / mc_t, 1),
+                "speedup": round(des_t / mc_t, 1),
+                "des_cost_mean": round(des_cost, 4),
+                "mc_cost_mean": round(float(mc.cost.mean()), 4),
+                "des_mkp_mean": round(des_mkp, 1),
+                "mc_mkp_mean": round(float(mc.makespan.mean()), 1),
+                "mc_met_frac": round(float(mc.deadline_met.mean()), 3),
+                "mc_hib_mean": round(float(mc.n_hibernations.mean()), 2),
+            })
+    return rows
+
+
+def smoke() -> list[dict]:
+    """CI-sized variant: tiny S, one dt."""
+    return run(sizes=(1, 16), dts=(30.0,))

@@ -1,6 +1,8 @@
-"""Reproduce the paper's §IV comparison on one job across all scenarios.
+"""Table V/VI as *distributions*: every policy x scenario cell is a batched
+Monte-Carlo estimate (mean ± 95% CI over S traces), not a one-trace
+anecdote.
 
-  PYTHONPATH=src python examples/paper_scenarios.py [J60]
+  PYTHONPATH=src python examples/paper_scenarios.py [J60] [S]
 """
 import sys
 
@@ -9,27 +11,29 @@ sys.path.insert(0, "src")
 from repro.core.dynamic import BURST_HADS, HADS, ILS_ONDEMAND
 from repro.core.ils import ILSParams
 from repro.core.types import CloudConfig
-from repro.sim.events import SCENARIOS, SC_NONE
-from repro.sim.simulator import simulate
+from repro.sim.mc_engine import MCParams, mc_sweep
 from repro.sim.workloads import make_job
 
 
 def main() -> None:
     job = make_job(sys.argv[1] if len(sys.argv) > 1 else "J60")
-    cfg = CloudConfig()
-    params = ILSParams(max_iteration=40, max_attempt=20, seed=9)
+    n = int(sys.argv[2]) if len(sys.argv) > 2 else 256
+    mc = MCParams(n_scenarios=n, dt=30.0, seed=3)
 
-    print(f"{'policy':14s}{'scenario':10s}{'cost':>9s}{'makespan':>10s}"
-          f"{'met':>5s}{'hib':>5s}")
-    for policy in (BURST_HADS, HADS, ILS_ONDEMAND):
-        scenarios = ["none"] if policy is ILS_ONDEMAND else \
-            ["none", "sc1", "sc2", "sc3", "sc4", "sc5"]
-        for sc in scenarios:
-            r = simulate(job, cfg, policy, SCENARIOS[sc], seed=3,
-                         params=params)
-            print(f"{r.policy:14s}{sc:10s}${r.cost:8.3f}"
-                  f"{r.makespan:9.0f}s{str(r.deadline_met):>5s}"
-                  f"{r.n_hibernations:5d}")
+    print(f"{job.name}: {n} Monte-Carlo traces per cell (dt={mc.dt:.0f}s)\n")
+    print(f"{'policy':14s}{'scenario':10s}{'cost mean±ci95':>18s}"
+          f"{'makespan mean±ci95':>22s}{'met%':>6s}{'hib':>6s}")
+    rows = mc_sweep(job, CloudConfig(), (BURST_HADS, HADS, ILS_ONDEMAND),
+                    params=mc,
+                    ils_params=ILSParams(max_iteration=40, max_attempt=20,
+                                         seed=9))
+    for s in rows:
+        print(f"{s['policy']:14s}{s['scenario']:10s}"
+              f"  ${s['cost']['mean']:6.3f}±{s['cost']['ci95']:.3f}"
+              f"    {s['makespan']['mean']:7.0f}s±"
+              f"{s['makespan']['ci95']:3.0f}s"
+              f"{100 * s['deadline_met_frac']:5.0f}%"
+              f"{s['mean_hibernations']:6.2f}")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,13 @@
-"""Smoke: simulate J60 under all three policies, no-hibernation + sc2/sc5."""
+"""Smoke: simulate J60 under all three policies, no-hibernation + sc2/sc5,
+then the batched Monte-Carlo engine on the same cells."""
 import time
 
-from repro.core.dynamic import BURST_HADS, HADS, ILS_ONDEMAND
+from repro.core.dynamic import BURST_HADS, HADS, ILS_ONDEMAND, \
+    build_primary_map
 from repro.core.ils import ILSParams
 from repro.core.types import CloudConfig
 from repro.sim.events import SCENARIOS, SC_NONE
+from repro.sim.mc_engine import MCParams, run_mc
 from repro.sim.simulator import simulate
 from repro.sim.workloads import make_job
 
@@ -25,4 +28,18 @@ for policy in (BURST_HADS, HADS, ILS_ONDEMAND):
               f"{r.makespan:8.0f}s {str(r.deadline_met):>3s} "
               f"{r.n_hibernations:4d} {r.n_resumes:4d} "
               f"{r.n_dynamic_ondemand:6d} {r.counters} "
+              f"({time.time()-t0:.1f}s)")
+
+print("\nMonte-Carlo engine (64 traces per cell):")
+for policy in (BURST_HADS, HADS):
+    plan = build_primary_map(job, cfg, policy, params)
+    for sc_name in ("none", "sc5"):
+        t0 = time.time()
+        m = run_mc(job, plan, cfg, SCENARIOS[sc_name],
+                   MCParams(n_scenarios=64, dt=30.0, seed=11))
+        s = m.summary()
+        print(f"{policy.name:14s} {sc_name:9s} "
+              f"${s['cost']['mean']:6.3f}±{s['cost']['ci95']:.3f} "
+              f"{s['makespan']['mean']:7.0f}s "
+              f"met {100 * s['deadline_met_frac']:3.0f}% "
               f"({time.time()-t0:.1f}s)")

@@ -34,6 +34,19 @@ class PolicyConfig:
     work_stealing: bool          # Algorithm 5
     freeze_in_place: bool        # hibernation preserves task memory (HADS)
 
+    @property
+    def hibernatable(self) -> bool:
+        """Whether Table V hibernation scenarios apply: only spot primary
+        maps can lose VMs to the provider."""
+        return self.market == Market.SPOT
+
+    def scenario_names(self) -> tuple[str, ...]:
+        """Scenario sweep relevant to this policy (§IV): on-demand maps
+        only face the event-free baseline."""
+        if not self.hibernatable:
+            return ("none",)
+        return ("none", "sc1", "sc2", "sc3", "sc4", "sc5")
+
 
 BURST_HADS = PolicyConfig("burst-hads", primary="ils", market=Market.SPOT,
                           use_burstables=True, immediate_migration=True,

@@ -1,3 +1,5 @@
-from .ops import delta_fitness, population_fitness  # noqa: F401
-from .ref import delta_fitness_ref, population_fitness_ref  # noqa: F401
+from .mc_step import mc_vm_reduce  # noqa: F401
+from .ops import delta_fitness, mc_vm_stats, population_fitness  # noqa: F401
+from .ref import (delta_fitness_ref, mc_vm_stats_ref,  # noqa: F401
+                  population_fitness_ref)
 from .sched_fitness import population_reduce  # noqa: F401

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: per-slot Monte-Carlo VM reductions (DESIGN.md §2.3).
+
+The batched hibernation engine (``repro.sim.mc_engine``) advances S
+scenarios in lockstep; every slot it needs, per scenario and per VM column,
+the remaining committed load, the unfinished-task count (whose zero set is
+the idle mask driving Alg. 5 stealing and AC termination) and the largest
+single remaining task (the deferred-HADS safety bound).  All three are
+reductions of the [S, B] assignment against the [S, B] remaining-work
+vector, so — like ``population_reduce`` — the kernel streams task tiles
+over a ``(S / sb, B / tb)`` grid with the task axis as the sequential minor
+grid dim, accumulating into revisited [sb, V] VMEM output tiles; the VM
+axis is padded to the 128-lane register width with ≥ 1 pad column reserved
+for masked-out tasks (done, unassigned, or padding).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .sched_fitness import _pad_vms
+
+
+def _mc_kernel(cols_ref, w_ref, load_ref, cnt_ref, maxw_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        load_ref[...] = jnp.zeros_like(load_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        maxw_ref[...] = jnp.zeros_like(maxw_ref)
+
+    cols = cols_ref[...]                                    # [sb, tb] int32
+    w = w_ref[...]                                          # [sb, tb] f32
+    v_ids = jax.lax.broadcasted_iota(jnp.int32, (1, 1, load_ref.shape[1]), 2)
+    onehot = (cols[:, :, None] == v_ids).astype(w.dtype)    # [sb, tb, V]
+
+    load_ref[...] += jnp.sum(onehot * w[:, :, None], axis=1)
+    cnt_ref[...] += jnp.sum(onehot, axis=1)
+    maxw_ref[...] = jnp.maximum(
+        maxw_ref[...], jnp.max(onehot * w[:, :, None], axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("v", "sb", "tb", "interpret"))
+def mc_vm_reduce(cols: jax.Array, w: jax.Array, v: int, *, sb: int = 8,
+                 tb: int = 128, interpret: bool = False):
+    """cols int32 [S, B] (VM column per task, anything outside [0, v) is
+    ignored); w f32 [S, B] (per-task weight, e.g. remaining base work) ->
+    (load, cnt, maxw) each f32 [S, v]."""
+    s, b = cols.shape
+    v_pad = _pad_vms(v)
+    b_pad = ((b + tb - 1) // tb) * tb
+    s_pad = ((s + sb - 1) // sb) * sb
+    # ignored tasks (and all padding) park on the reserved pad column
+    cols = jnp.where((cols >= 0) & (cols < v), cols, v_pad - 1)
+    cols = jnp.pad(cols, ((0, s_pad - s), (0, b_pad - b)),
+                   constant_values=v_pad - 1)
+    w = jnp.pad(w.astype(jnp.float32), ((0, s_pad - s), (0, b_pad - b)))
+
+    grid = (s_pad // sb, b_pad // tb)
+    out_spec = pl.BlockSpec((sb, v_pad), lambda i, j: (i, 0))
+    load, cnt, maxw = pl.pallas_call(
+        _mc_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((sb, tb), lambda i, j: (i, j)),
+                  pl.BlockSpec((sb, tb), lambda i, j: (i, j))],
+        out_specs=[out_spec] * 3,
+        out_shape=[jax.ShapeDtypeStruct((s_pad, v_pad), jnp.float32)] * 3,
+        interpret=interpret,
+    )(cols, w)
+    return load[:s, :v], cnt[:s, :v], maxw[:s, :v]

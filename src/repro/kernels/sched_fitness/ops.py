@@ -11,6 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .mc_step import mc_vm_reduce
 from .sched_fitness import delta_population_fitness, population_reduce
 
 
@@ -60,3 +61,16 @@ def delta_fitness(alloc, t_idx, dest, base, e, rm, vm_cores, vm_mem,
     return delta_population_fitness(alloc, t_idx, dest, base, e, rm,
                                     vm_cores, vm_mem, vm_price, limit,
                                     params, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("v", "interpret"))
+def mc_vm_stats(assign, rem, *, v: int, interpret: bool = True):
+    """Per-scenario per-VM remaining-load / unfinished-count / max-remaining,
+    one streamed pass over the [S, B] assignment (the Monte-Carlo engine's
+    hot per-slot reduction, DESIGN.md §2.3).  Tasks with ``rem <= 0`` or an
+    out-of-range column are ignored; ``cnt == 0`` is the idle mask.
+    Returns (load, cnt, maxw) each f32 [S, v]."""
+    pending = rem > 0.0
+    cols = jnp.where(pending, assign, -1)
+    w = jnp.where(pending, rem, 0.0).astype(jnp.float32)
+    return mc_vm_reduce(cols, w, v, interpret=interpret)

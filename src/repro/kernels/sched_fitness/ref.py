@@ -60,6 +60,21 @@ def apply_moves(alloc: jax.Array, t_idx: jax.Array, dest: jax.Array
         jnp.broadcast_to(dest[:, :, None], (p, k, n)))
 
 
+def mc_vm_stats_ref(cols: jax.Array, w: jax.Array, v: int
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for ``mc_step.mc_vm_reduce``: per-(scenario, VM) remaining
+    load / unfinished count / max single remaining task.
+
+    cols int32 [S, B] (entries outside [0, v) are ignored); w f32 [S, B].
+    Returns (load, cnt, maxw) each f32 [S, v]."""
+    keep = (cols >= 0) & (cols < v)
+    onehot = jax.nn.one_hot(jnp.where(keep, cols, v), v, dtype=w.dtype)
+    load = jnp.einsum("sbv,sb->sv", onehot, w)
+    cnt = onehot.sum(axis=1)
+    maxw = jnp.max(onehot * w[:, :, None], axis=1)
+    return load, cnt, maxw
+
+
 def delta_fitness_ref(alloc, t_idx, dest, e, rm, vm_cores, vm_mem, vm_price,
                       vm_is_spot, *, dspot, deadline, alpha, cost_scale,
                       boot_s):

@@ -1,1 +1,3 @@
+from .mc_engine import (MCParams, MCResult, mc_sweep, run_mc,  # noqa: F401
+                        simulate_mc)
 from .workloads import make_job, J60, J80, J100, ED200  # noqa: F401

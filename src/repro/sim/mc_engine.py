@@ -1,0 +1,598 @@
+"""Batched Monte-Carlo hibernation engine — §III-D over *distributions*.
+
+The discrete-event simulator (``sim.simulator``) replays ONE Poisson
+interruption trace per run; Table V conclusions drawn from it are one-trace
+anecdotes.  This module advances S independent hibernation scenarios in
+lockstep on device: time is discretized into fixed slots of ``dt`` seconds
+and a jit-compiled ``lax.while_loop`` steps per-slot state
+
+  * ``[S, V]`` VM columns — lifecycle (not-launched / active / hibernated /
+    terminated), boot clocks, billing accumulators that *pause during
+    hibernation*, and burstable CPU-credit buckets;
+  * ``[S, B]`` tasks — remaining base work, current VM column, exec mode
+    and completion times;
+
+implementing vectorized equivalents of the paper's dynamic module:
+
+  * **Alg. 4 (checkpoint-rollback migration)** — on a hibernation event the
+    victim's unfinished tasks roll back to their checkpoint grid and are
+    re-assigned via an argmin-over-columns rule (projected drain time +
+    boot penalty + price tie-break) over spare burstable/on-demand
+    capacity, spread across ``mig_rounds`` argmin rounds so a bag fans out
+    over several columns (mirroring the per-task cascade), launching fresh
+    on-demand columns when nothing active fits;
+  * **Alg. 5 (work stealing)** — at Allocation-Cycle boundaries idle VMs
+    steal the largest remaining task from the most-queued column's tail;
+  * **AC termination** — idle non-burstable columns terminate at the AC
+    boundary (after the stealing attempt), ending their billing;
+  * **deferred-HADS migration** — under ``freeze_in_place`` policies frozen
+    tasks stay on the hibernated column until the latest safe instant, then
+    migrate to on-demand capacity.
+
+Policy behaviour mirrors ``core.dynamic.PolicyConfig`` flags exactly; the
+config object itself is the (hashable) static jit argument.  The per-slot
+hot reduction — per-scenario per-VM remaining load / unfinished count /
+max remaining task — is the ``mc_vm_stats`` Pallas kernel
+(``kernels/sched_fitness/mc_step.py``) on accelerators and a shared
+one-hot/cumsum pass on CPU; event handling (migration, stealing,
+termination) is hoisted behind ``lax.cond`` on batch-wide predicates so
+the common no-event slot touches only the progress/billing path.
+Slot-discretization error bounds and the DES parity contract are
+documented in DESIGN.md §2.3.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dynamic import (BURST_HADS, PolicyConfig, PrimaryPlan,
+                                build_primary_map)
+from repro.core.fitness import pack_solution
+from repro.core.ils import ILSParams
+from repro.core.runtime import CHECKPOINT_WRITE_S
+from repro.core.types import CloudConfig, Job, Market
+from repro.kernels.sched_fitness.ops import mc_vm_stats
+from .events import SC_NONE, Scenario
+
+BIG = 1e30
+
+#: VM column lifecycle codes (``vstate``)
+NOT_LAUNCHED, VM_ACTIVE, VM_HIBERNATED, VM_TERMINATED = 0, 1, 2, 3
+
+
+@dataclasses.dataclass(frozen=True)
+class MCParams:
+    """Engine knobs.  ``dt`` must divide both the boot overhead and the
+    Allocation Cycle so AC boundaries land on slot edges."""
+
+    n_scenarios: int = 256
+    dt: float = 30.0
+    horizon_mult: float = 3.0     # run to horizon_mult * deadline, like DES
+    seed: int = 0
+    ovh: float = 0.10             # checkpoint overhead budget (paper §IV)
+    hads_margin_s: float = 30.0   # deferred-migration safety margin
+    steal_rounds: int = 2         # Alg. 5 attempts per AC boundary
+    mig_rounds: int = 8           # Alg. 4 argmin rounds (bag fan-out width)
+    use_kernel: bool | None = None  # None: Pallas on accelerators, jnp on CPU
+    interpret: bool | None = None   # None: interpret only on CPU
+
+
+@dataclasses.dataclass
+class MCResult:
+    """Per-scenario outcome arrays + distribution summaries."""
+
+    policy: str
+    scenario: str
+    dt: float
+    deadline_s: float
+    cost: np.ndarray          # f32 [S]
+    makespan: np.ndarray      # f32 [S]
+    deadline_met: np.ndarray  # bool [S]
+    unfinished: np.ndarray    # int [S]
+    n_hibernations: np.ndarray
+    n_resumes: np.ndarray
+    billed_s: np.ndarray      # f32 [S, V] billed seconds per column
+    vm_uids: list[int]        # column -> VMInstance.uid
+
+    @property
+    def n(self) -> int:
+        return len(self.cost)
+
+    def summary(self) -> dict:
+        def stats(x: np.ndarray) -> dict:
+            m, sd = float(np.mean(x)), float(np.std(x))
+            return {"mean": m, "std": sd,
+                    "ci95": 1.96 * sd / max(1, len(x)) ** 0.5,
+                    "p95": float(np.percentile(x, 95))}
+        return {"policy": self.policy, "scenario": self.scenario,
+                "n": self.n, "cost": stats(self.cost),
+                "makespan": stats(self.makespan),
+                "deadline_met_frac": float(np.mean(self.deadline_met)),
+                "mean_hibernations": float(np.mean(self.n_hibernations)),
+                "mean_resumes": float(np.mean(self.n_resumes))}
+
+
+# ---------------------------------------------------------------------------
+# Problem arrays
+# ---------------------------------------------------------------------------
+def _plan_arrays(job: Job, plan: PrimaryPlan, cfg: CloudConfig, ovh: float
+                 ) -> tuple[dict, list[int]]:
+    """Flatten (job, plan) into the engine's column/task arrays.
+
+    Columns are the *launchable* instances only: the primary map's VMs plus
+    every on-demand instance Alg. 4 may launch dynamically (unselected spot
+    and burstable instances can never enter a run).  The task axis is
+    permuted to the DES dispatch order — packed start time, tid tie-break —
+    so the per-column rank order reproduces each VM's queue order.
+    """
+    sol = plan.solution
+    pool = sol.pool
+    per_vm = pack_solution(sol, job.tasks, cfg)
+    assert per_vm is not None, "primary map must be packable"
+    uids = sorted(set(sol.selected_uids) |
+                  {vm.uid for vm in pool if vm.market == Market.ONDEMAND})
+    col_of = {u: c for c, u in enumerate(uids)}
+
+    b = job.n_tasks
+    starts = np.zeros(b)
+    for vs in per_vm.values():
+        for a in vs.assignments:
+            starts[a.task.tid] = a.start
+    perm = np.lexsort((np.arange(b), starts))
+    tasks = [job.tasks[int(i)] for i in perm]
+
+    base = np.array([t.base_time for t in tasks], np.float64)
+    total = (base * (1.0 + ovh)).astype(np.float32)
+    n_cp = np.maximum(1, (ovh * base / CHECKPOINT_WRITE_S).astype(np.int64))
+    cp = (total / (n_cp + 1)).astype(np.float32)
+
+    vms = [pool[u] for u in uids]
+    arr = {
+        "total": jnp.asarray(total),
+        "cp": jnp.asarray(cp),
+        "mem_t": jnp.asarray([t.memory_mb for t in tasks], jnp.float32),
+        "assign0": jnp.asarray([col_of[int(sol.alloc[i])] for i in perm],
+                               jnp.int32),
+        "mode0": jnp.asarray([int(sol.modes[i]) for i in perm], jnp.int32),
+        "price": jnp.asarray([vm.price_per_sec for vm in vms], jnp.float32),
+        "cores": jnp.asarray([vm.vcpus for vm in vms], jnp.float32),
+        "speed": jnp.asarray([vm.vm_type.gflops / cfg.gflops_ref
+                              for vm in vms], jnp.float32),
+        "bfrac": jnp.asarray([vm.vm_type.baseline_frac for vm in vms],
+                             jnp.float32),
+        "memv": jnp.asarray([vm.memory_mb for vm in vms], jnp.float32),
+        "crate": jnp.asarray([vm.vm_type.credit_rate_per_hour / 3600.0
+                              for vm in vms], jnp.float32),
+        "cinit": jnp.asarray([vm.vm_type.initial_credits for vm in vms],
+                             jnp.float32),
+        "ccap": jnp.asarray([vm.vm_type.credit_rate_per_hour * 24.0
+                             for vm in vms], jnp.float32),
+        "spot": jnp.asarray([vm.is_spot for vm in vms], bool),
+        "burst": jnp.asarray([vm.is_burstable for vm in vms], bool),
+        "odm": jnp.asarray([vm.market == Market.ONDEMAND for vm in vms],
+                           bool),
+        "burst_idx": jnp.asarray(
+            [c for c, vm in enumerate(vms) if vm.is_burstable], jnp.int32),
+        "launched0": jnp.asarray([u in sol.selected_uids for u in uids],
+                                 bool),
+    }
+    return arr, uids
+
+
+def _scalars(job: Job, cfg: CloudConfig, scenario: Scenario,
+             params: MCParams) -> dict:
+    d = job.deadline_s
+    dt = params.dt
+    od_speed = min(t.gflops for t in cfg.ondemand_types) / cfg.gflops_ref
+    return {
+        "dt": jnp.float32(dt),
+        "deadline": jnp.float32(d),
+        "omega": jnp.float32(cfg.boot_overhead_s),
+        "restore": jnp.float32(cfg.checkpoint_restore_s),
+        "bperiod": jnp.float32(cfg.burst_period_s),
+        "margin": jnp.float32(params.hads_margin_s),
+        "od_speed": jnp.float32(od_speed),
+        "ph": jnp.float32(min(1.0, scenario.k_h * dt / d)),
+        "pr": jnp.float32(min(1.0, scenario.k_r * dt / d)),
+        "boot_slots": jnp.int32(round(cfg.boot_overhead_s / dt)),
+        "ac_slots": jnp.int32(round(cfg.allocation_cycle_s / dt)),
+        "max_slots": jnp.int32(math.ceil(d * params.horizon_mult / dt)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Jitted engine helpers
+# ---------------------------------------------------------------------------
+def _dest_column(load, vstate, boot, credits, aff_load, aff_mem, arr, sc, t,
+                 *, allow_burstable: bool):
+    """Alg. 4's cascade as one argmin-over-columns rule: score every column
+    by projected drain time (+ remaining boot, + a price tie-break for
+    fresh launches, - a small burstable preference), mask the ineligible
+    ones, argmin.  Returns (dest [S], feasible [S])."""
+    cores, speed = arr["cores"], arr["speed"]
+    burst, odm, memv, price = (arr["burst"], arr["odm"], arr["memv"],
+                               arr["price"])
+    fits = aff_mem[:, None] <= memv[None] + 1e-6
+    ok_active = (vstate == VM_ACTIVE) & fits
+    if allow_burstable:
+        # enough credits to run the whole moved load at full speed
+        cred_ok = credits * sc["bperiod"] * speed[None] > aff_load[:, None]
+        ok_active &= ~burst[None] | cred_ok
+    else:
+        ok_active &= ~burst[None]
+    ok_new = (vstate == NOT_LAUNCHED) & odm[None] & fits
+
+    drain = load / (cores * speed)[None]
+    boot_left = jnp.clip(boot - t, 0.0, sc["omega"])
+    score = jnp.where(
+        ok_active,
+        drain + boot_left - jnp.where(burst[None], 1.0, 0.0),
+        jnp.where(ok_new, sc["omega"] + price[None] * 3600.0, BIG))
+    dest = jnp.argmin(score, axis=1).astype(jnp.int32)
+    feasible = jnp.min(score, axis=1) < BIG * 0.5
+    return dest, feasible
+
+
+def _checkpoint_floor(rem, total, cp, mask):
+    """Roll masked tasks' progress back to their checkpoint grid (§III-E)."""
+    done = jnp.maximum(total[None] - rem, 0.0)
+    done_cp = jnp.floor(done / cp[None] + 1e-6) * cp[None]
+    return jnp.where(mask, total[None] - done_cp, rem)
+
+
+def _apply_launch(vstate, boot, dest, do, t, sc, iota_v):
+    """Launch ``dest`` columns that were NOT_LAUNCHED (dynamic on-demand)."""
+    hit = do[:, None] & (iota_v == dest[:, None]) & (vstate == NOT_LAUNCHED)
+    vstate = jnp.where(hit, VM_ACTIVE, vstate)
+    boot = jnp.where(hit, t + sc["omega"], boot)
+    return vstate, boot
+
+
+def _migrate_spread(do_ev, aff, rem, load, vstate, boot, credits, assign,
+                    mode, rcv, arr, sc, t1, *, allow_burstable: bool,
+                    rounds: int):
+    """Vectorized Alg. 4: checkpoint rollback, then ``rounds`` argmin
+    re-assignment rounds — group g (every rounds-th affected task) goes to
+    the current argmin column, whose projected load is then updated — so a
+    hibernated bag fans out instead of dog-piling one target."""
+    total, cp, mem_t, speed = arr["total"], arr["cp"], arr["mem_t"], \
+        arr["speed"]
+    iota_v = jnp.arange(vstate.shape[1])[None]
+    rem = _checkpoint_floor(rem, total, cp, aff & do_ev[:, None])
+    aff_rank = jnp.cumsum(aff.astype(jnp.int32), axis=1) - 1
+    for g in range(rounds):
+        mg = aff & (aff_rank % rounds == g)
+        load_g = jnp.sum(jnp.where(mg, rem, 0.0), axis=1)
+        mem_g = jnp.max(jnp.where(mg, mem_t[None], 0.0), axis=1)
+        dest, feasible = _dest_column(load, vstate, boot, credits, load_g,
+                                      mem_g, arr, sc, t1,
+                                      allow_burstable=allow_burstable)
+        do_g = do_ev & jnp.any(mg, axis=1) & feasible
+        moved = mg & do_g[:, None]
+        has_prog = (total[None] - rem) > 1e-6
+        rem = rem + jnp.where(moved & has_prog,
+                              sc["restore"] * speed[dest][:, None], 0.0)
+        assign = jnp.where(moved, dest[:, None], assign)
+        mode = jnp.where(moved, 0, mode)
+        vstate, boot = _apply_launch(vstate, boot, dest, do_g, t1, sc,
+                                     iota_v)
+        hit = do_g[:, None] & (iota_v == dest[:, None])
+        load = load + jnp.where(hit, (load_g + sc["restore"])[:, None], 0.0)
+        rcv = rcv | hit
+    return rem, assign, mode, vstate, boot, rcv
+
+
+def _pick(key, elig):
+    """Uniform choice among eligible columns per scenario (Gumbel-max)."""
+    u = jax.random.uniform(key, elig.shape)
+    return (jnp.argmax(jnp.where(elig, u, -1.0), axis=1).astype(jnp.int32),
+            jnp.any(elig, axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Jitted engine
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=(
+    "s", "policy", "steal_rounds", "mig_rounds", "mem_safe", "use_kernel",
+    "interpret"))
+def _mc_run(arr: dict, sc: dict, key, *, s: int, policy: PolicyConfig,
+            steal_rounds: int, mig_rounds: int, mem_safe: bool,
+            use_kernel: bool, interpret: bool) -> dict:
+    total, mem_t = arr["total"], arr["mem_t"]
+    price, cores, speed = arr["price"], arr["cores"], arr["speed"]
+    bfrac, memv = arr["bfrac"], arr["memv"]
+    crate, ccap = arr["crate"], arr["ccap"]
+    spot, burst = arr["spot"], arr["burst"]
+    b, v = total.shape[0], price.shape[0]
+    dt = sc["dt"]
+    iota_v = jnp.arange(v)[None]
+    rows = jnp.arange(s)
+
+    launched0 = arr["launched0"]
+    carry = (
+        jnp.int32(0),                                             # slot i
+        key,
+        jnp.tile(jnp.where(launched0, VM_ACTIVE,
+                           NOT_LAUNCHED).astype(jnp.int32)[None], (s, 1)),
+        jnp.tile(jnp.where(launched0, sc["omega"], BIG)[None], (s, 1)),
+        jnp.zeros((s, v), jnp.float32),                           # billed
+        jnp.tile(jnp.where(launched0 & burst, arr["cinit"],
+                           0.0)[None], (s, 1)),                   # credits
+        jnp.tile(total[None], (s, 1)),                            # rem
+        jnp.tile(arr["assign0"][None], (s, 1)),                   # assign
+        jnp.tile(arr["mode0"][None], (s, 1)),                     # mode
+        jnp.full((s, b), BIG, jnp.float32),                       # done_at
+        jnp.zeros(s, jnp.int32),                                  # n_hib
+        jnp.zeros(s, jnp.int32),                                  # n_res
+    )
+
+    def cond(c):
+        return (c[0] < sc["max_slots"]) & jnp.any(c[6] > 0.0)
+
+    def step(c):
+        (i, key, vstate, boot, billed, credits, rem, assign, mode, done_at,
+         nhib, nres) = c
+        t = i.astype(jnp.float32) * dt     # slot covers [t, t + dt)
+        t1 = t + dt
+        key, kh, kv, kr, kw = jax.random.split(key, 5)
+
+        pending = rem > 0.0
+        gate = jnp.any(pending, axis=1)                       # [S] live
+
+        # ---- per-slot stats: the hot [S, B] -> [S, V] reduction ---------
+        # One shared pending one-hot feeds every column reduction; its
+        # task-axis cumsum yields both per-column counts and each task's
+        # queue rank within its column (B-axis order = dispatch priority).
+        ohp = ((assign[:, :, None] == iota_v[None]) &
+               pending[:, :, None]).astype(jnp.float32)       # [S, B, V]
+        cum = jnp.cumsum(ohp, axis=1)
+
+        def col_sum(w):
+            """Per-column sum of the [S, B] weight vector ``w``."""
+            return jnp.einsum("sbv,sb->sv", ohp, w)
+
+        if use_kernel:
+            # accelerator path: the Pallas kernel supplies the [S, V]
+            # reductions — counts/max here, migration loads post-progress
+            # inside the event branches.  The one-hot/cumsum below remains
+            # only for the queue rank; a TPU-native rank kernel is the
+            # open item (DESIGN.md §2.3).
+            _, cnt, maxw = mc_vm_stats(assign, rem, v=v, interpret=interpret)
+        else:
+            cnt = cum[:, -1, :]
+            maxw = jnp.max(ohp * rem[:, :, None], axis=1) \
+                if policy.freeze_in_place else None
+        rank = jnp.take_along_axis(cum, assign[:, :, None],
+                                   axis=2)[:, :, 0] - 1.0
+
+        # ---- progress over [t, t + dt) ----------------------------------
+        active = vstate == VM_ACTIVE
+        live = jnp.clip((t1 - boot) / dt, 0.0, 1.0) * active  # [S, V] f32
+        rate_t = jnp.take_along_axis(live, assign, axis=1)
+        cred_ok = jnp.take_along_axis(credits > 1e-9, assign, axis=1)
+        burst_t = burst[assign]
+        sfac = jnp.where((mode == 1) | (burst_t & ~cred_ok), bfrac[assign],
+                         1.0)
+        run = pending & (rank < cores[assign])
+        if not mem_safe:
+            memcum = jnp.take_along_axis(
+                jnp.cumsum(ohp * mem_t[None, :, None], axis=1),
+                assign[:, :, None], axis=2)[:, :, 0]
+            run &= memcum <= memv[assign] + 1e-6
+        drem = dt * rate_t * speed[assign] * sfac * run
+        rem2 = jnp.maximum(rem - drem, 0.0)
+        newly = pending & (rem2 <= 0.0)
+        frac = jnp.clip(rem / jnp.maximum(drem, 1e-9), 0.0, 1.0)
+        done_at = jnp.where(newly, t + dt * frac, done_at)
+
+        # ---- billing (pauses during hibernation, ends at termination /
+        # scenario completion) + burstable credit accrual -----------------
+        billed = billed + dt * live * gate[:, None]
+        bi = arr["burst_idx"]
+        spend_b = jnp.einsum("sbk,sb->sk", ohp[:, :, bi],
+                             (run & (mode == 0)).astype(jnp.float32))
+        credits = credits.at[:, bi].set(jnp.where(
+            active[:, bi],
+            jnp.clip(credits[:, bi] + dt * live[:, bi] * crate[bi][None]
+                     - (dt / sc["bperiod"]) * spend_b, 0.0, ccap[bi][None]),
+            credits[:, bi]))
+
+        rcv = jnp.zeros((s, v), bool)      # columns given tasks this slot
+
+        # ---- hibernation event (victim: random active booted spot) ------
+        ev_h = (jax.random.uniform(kh, (s,)) < sc["ph"]) & \
+            (t < sc["deadline"]) & gate
+        victim, has_v = _pick(kv, active & spot[None] & (boot <= t1))
+        do_hib = ev_h & has_v
+        nhib = nhib + do_hib
+        vstate = jnp.where(do_hib[:, None] & (iota_v == victim[:, None]),
+                           VM_HIBERNATED, vstate)
+
+        if policy.immediate_migration:
+            # Alg. 4: checkpoint rollback + spread argmin re-assignment
+            affected = do_hib[:, None] & (assign == victim[:, None]) & \
+                (rem2 > 0)
+
+            def mig(ops):
+                rem2, assign, mode, vstate, boot, rcv = ops
+                load = mc_vm_stats(assign, rem2, v=v,
+                                   interpret=interpret)[0] \
+                    if use_kernel else col_sum(rem2 * (rem2 > 0))
+                return _migrate_spread(
+                    do_hib, affected, rem2, load, vstate, boot, credits,
+                    assign, mode, rcv, arr, sc, t1,
+                    allow_burstable=policy.use_burstables,
+                    rounds=mig_rounds)
+
+            (rem2, assign, mode, vstate, boot, rcv) = jax.lax.cond(
+                jnp.any(affected), mig, lambda ops: ops,
+                (rem2, assign, mode, vstate, boot, rcv))
+        # else: freeze in place (HADS) — tasks stay attached, no progress
+        # while the column is hibernated, exact progress preserved.
+
+        # ---- resume event (beneficiary: random hibernated column) -------
+        ev_r = (jax.random.uniform(kr, (s,)) < sc["pr"]) & \
+            (t < sc["deadline"]) & gate
+        res_col, has_r = _pick(kw, vstate == VM_HIBERNATED)
+        do_res = ev_r & has_r
+        nres = nres + do_res
+        vstate = jnp.where(do_res[:, None] & (iota_v == res_col[:, None]),
+                           VM_ACTIVE, vstate)
+
+        if policy.freeze_in_place:
+            # deferred-HADS migration at the latest safe instant
+            # (conservative single-wave estimate on the slowest on-demand
+            # type, mirroring Simulator._hads_latest_safe_time)
+            t_safe = sc["deadline"] - (sc["omega"] + maxw / sc["od_speed"]
+                                       + sc["restore"] + sc["margin"])
+            fire = (vstate == VM_HIBERNATED) & (cnt > 0.5) & \
+                (t1 >= t_safe - dt) & gate[:, None]
+            aff2 = (rem2 > 0) & jnp.take_along_axis(fire, assign, axis=1)
+            do2 = jnp.any(aff2, axis=1)
+
+            def defer(ops):
+                rem2, assign, mode, vstate, boot, rcv = ops
+                load = mc_vm_stats(assign, rem2, v=v,
+                                   interpret=interpret)[0] \
+                    if use_kernel else col_sum(rem2 * (rem2 > 0))
+                return _migrate_spread(
+                    do2, aff2, rem2, load, vstate, boot, credits, assign,
+                    mode, rcv, arr, sc, t1, allow_burstable=False,
+                    rounds=mig_rounds)
+
+            (rem2, assign, mode, vstate, boot, rcv) = jax.lax.cond(
+                jnp.any(aff2), defer, lambda ops: ops,
+                (rem2, assign, mode, vstate, boot, rcv))
+
+        # ---- Allocation-Cycle boundary: work stealing + idle termination
+        i1 = i + 1
+        is_ac = (i1 > sc["boot_slots"]) & \
+            ((i1 - sc["boot_slots"]) % sc["ac_slots"] == 0)
+        booted = boot <= t1
+
+        def ac_block(ops):
+            vstate, assign, mode = ops
+            cnt_live = cnt - col_sum(newly.astype(jnp.float32))
+            if policy.work_stealing:
+                a, m, cl = assign, mode, cnt_live
+                for _ in range(steal_rounds):
+                    idle = (vstate == VM_ACTIVE) & booted & (cl < 0.5) & \
+                        gate[:, None]
+                    thief = jnp.argmin(jnp.where(idle, iota_v, v + 1),
+                                       axis=1).astype(jnp.int32)
+                    has_thief = jnp.any(idle, axis=1)
+                    queued = jnp.where(burst[None], 0.0,
+                                       jnp.maximum(cl - cores[None], 0.0))
+                    vict = jnp.argmax(queued, axis=1).astype(jnp.int32)
+                    has_q = jnp.max(queued, axis=1) > 0.5
+                    on_vict = (rem2 > 0) & (a == vict[:, None]) & \
+                        (rank >= cores[vict][:, None])
+                    tsk = jnp.argmax(jnp.where(on_vict, rem2, -1.0),
+                                     axis=1).astype(jnp.int32)
+                    do_steal = has_thief & has_q & gate & \
+                        jnp.any(on_vict, axis=1) & \
+                        (mem_t[tsk] <= memv[thief] + 1e-6)
+                    a = a.at[rows, tsk].set(
+                        jnp.where(do_steal, thief, a[rows, tsk]))
+                    m = m.at[rows, tsk].set(
+                        jnp.where(do_steal, burst[thief].astype(jnp.int32),
+                                  m[rows, tsk]))
+                    shift = do_steal[:, None].astype(jnp.float32)
+                    cl = cl + shift * (iota_v == thief[:, None]) \
+                        - shift * (iota_v == vict[:, None])
+                assign, mode, cnt_live = a, m, cl
+            term = (vstate == VM_ACTIVE) & booted & (cnt_live < 0.5) & \
+                ~burst[None] & ~rcv & gate[:, None]
+            vstate = jnp.where(term, VM_TERMINATED, vstate)
+            return vstate, assign, mode
+
+        (vstate, assign, mode) = jax.lax.cond(
+            is_ac, ac_block, lambda ops: ops, (vstate, assign, mode))
+
+        return (i1, key, vstate, boot, billed, credits, rem2, assign, mode,
+                done_at, nhib, nres)
+
+    out = jax.lax.while_loop(cond, step, carry)
+    (_, _, _, _, billed, _, rem, _, _, done_at, nhib, nres) = out
+    makespan = jnp.max(jnp.where(done_at < BIG * 0.5, done_at, 0.0), axis=1)
+    return {"cost": jnp.sum(billed * price[None], axis=1),
+            "makespan": makespan,
+            "unfinished": jnp.sum(rem > 0.0, axis=1),
+            "billed": billed, "n_hib": nhib, "n_res": nres}
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+def run_mc(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
+           scenario: Scenario = SC_NONE,
+           params: MCParams = MCParams()) -> MCResult:
+    """Run S Monte-Carlo scenarios of (job, plan, policy, scenario)."""
+    for name, q in (("boot overhead", cfg.boot_overhead_s),
+                    ("allocation cycle", cfg.allocation_cycle_s)):
+        if abs(q / params.dt - round(q / params.dt)) > 1e-9:
+            raise ValueError(f"dt={params.dt} must divide the {name} ({q}s) "
+                             f"so AC boundaries land on slot edges")
+    arr, uids = _plan_arrays(job, plan, cfg, params.ovh)
+    sc = _scalars(job, cfg, scenario, params)
+    # memory can never bind: even a full complement of the largest tasks
+    # fits every column -> skip the per-slot memory-cumsum pass
+    mem_safe = bool(float(np.max(np.asarray(arr["mem_t"])))
+                    * float(np.max(np.asarray(arr["cores"])))
+                    <= float(np.min(np.asarray(arr["memv"]))) + 1e-6)
+    on_cpu = jax.default_backend() == "cpu"
+    use_kernel = params.use_kernel if params.use_kernel is not None \
+        else not on_cpu
+    interpret = params.interpret if params.interpret is not None else on_cpu
+    out = _mc_run(arr, sc, jax.random.PRNGKey(params.seed),
+                  s=params.n_scenarios, policy=plan.policy,
+                  steal_rounds=params.steal_rounds,
+                  mig_rounds=params.mig_rounds, mem_safe=mem_safe,
+                  use_kernel=use_kernel, interpret=interpret)
+    out = jax.device_get(out)
+    unfinished = out["unfinished"].astype(int)
+    makespan = out["makespan"]
+    met = (unfinished == 0) & (makespan <= job.deadline_s + params.dt + 1e-6)
+    return MCResult(
+        policy=plan.policy.name, scenario=scenario.name, dt=params.dt,
+        deadline_s=job.deadline_s,
+        cost=out["cost"], makespan=makespan, deadline_met=met,
+        unfinished=unfinished,
+        n_hibernations=out["n_hib"].astype(int),
+        n_resumes=out["n_res"].astype(int),
+        billed_s=out["billed"], vm_uids=list(uids))
+
+
+def simulate_mc(job: Job, cfg: CloudConfig,
+                policy: PolicyConfig = BURST_HADS,
+                scenario: Scenario = SC_NONE,
+                params: MCParams = MCParams(),
+                ils_params: ILSParams | None = None) -> MCResult:
+    """Plan (Algorithm 1) once, then Monte-Carlo the dynamic phase."""
+    ils_params = ils_params or ILSParams(seed=params.seed)
+    plan = build_primary_map(job, cfg, policy, ils_params)
+    return run_mc(job, plan, cfg, scenario=scenario, params=params)
+
+
+def mc_sweep(job: Job, cfg: CloudConfig, policies, scenarios=None,
+             params: MCParams = MCParams(),
+             ils_params: ILSParams | None = None) -> list[dict]:
+    """Summaries for each (policy, scenario) pair — one plan per policy,
+    one batched MC run per scenario."""
+    from .events import SCENARIOS
+    ils_params = ils_params or ILSParams(seed=params.seed)
+    rows = []
+    for policy in policies:
+        plan = build_primary_map(job, cfg, policy, ils_params)
+        names = scenarios if scenarios is not None else \
+            policy.scenario_names()
+        for name in names:
+            res = run_mc(job, plan, cfg, scenario=SCENARIOS[name],
+                         params=params)
+            rows.append(res.summary())
+    return rows

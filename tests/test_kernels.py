@@ -8,8 +8,11 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.rwkv6.ops import wkv6
 from repro.kernels.rwkv6.ref import wkv6_ref
-from repro.kernels.sched_fitness.ops import delta_fitness, population_fitness
+from repro.kernels.sched_fitness.mc_step import mc_vm_reduce
+from repro.kernels.sched_fitness.ops import (delta_fitness, mc_vm_stats,
+                                             population_fitness)
 from repro.kernels.sched_fitness.ref import (apply_moves, delta_fitness_ref,
+                                             mc_vm_stats_ref,
                                              population_fitness_ref)
 from repro.kernels.sched_fitness.sched_fitness import population_reduce
 
@@ -35,6 +38,35 @@ def test_sched_fitness_matches_ref(p, b, v):
     for g, w in zip(got, want):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w),
                                    rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------- MC per-slot reduce
+@pytest.mark.parametrize("s,b,v", [(1, 1, 1), (3, 17, 5), (8, 60, 27),
+                                   (9, 200, 64), (16, 130, 128)])
+def test_mc_vm_reduce_matches_ref(s, b, v):
+    """Monte-Carlo VM reductions: kernel == jnp oracle, including ignored
+    tasks (done / unassigned / out-of-range columns)."""
+    rng = np.random.default_rng(s * 1000 + b)
+    cols = rng.integers(-1, v + 1, (s, b))          # -1 and v are ignored
+    w = rng.uniform(0.0, 400.0, (s, b))
+    w[rng.uniform(size=(s, b)) < 0.3] = 0.0         # done tasks
+    cols_j = jnp.asarray(cols, jnp.int32)
+    w_j = jnp.asarray(w, jnp.float32)
+    got = mc_vm_reduce(cols_j, w_j, v, interpret=True)
+    want = mc_vm_stats_ref(cols_j, w_j, v)
+    for name, g, ww in zip(("load", "cnt", "maxw"), got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(ww),
+                                   rtol=1e-5, atol=1e-5, err_msg=name)
+
+
+def test_mc_vm_stats_masks_done_tasks():
+    """The ops wrapper ignores rem <= 0 regardless of the column value."""
+    assign = jnp.asarray([[0, 0, 1, 2]], jnp.int32)
+    rem = jnp.asarray([[10.0, 0.0, 5.0, 0.0]], jnp.float32)
+    load, cnt, maxw = mc_vm_stats(assign, rem, v=3, interpret=True)
+    np.testing.assert_allclose(np.asarray(load), [[10.0, 5.0, 0.0]])
+    np.testing.assert_allclose(np.asarray(cnt), [[1.0, 1.0, 0.0]])
+    np.testing.assert_allclose(np.asarray(maxw), [[10.0, 5.0, 0.0]])
 
 
 # ---------------------------------------------------------- delta fitness

@@ -31,3 +31,17 @@ def test_tpu_fleet_survives_preemptions():
                                       seed=0))
         assert r.deadline_met, (seed, r.makespan)
         assert r.unfinished == 0
+
+
+def test_tpu_fleet_monte_carlo_distribution():
+    """DESIGN.md §2.2: the batched MC engine runs unchanged over the TPU
+    capacity markets (preemption distributions instead of single traces)."""
+    from repro.sim.mc_engine import MCParams, simulate_mc
+    cfg = tpu_cloud_config()
+    res = simulate_mc(_bag(), cfg, BURST_HADS, SCENARIOS["sc2"],
+                      MCParams(n_scenarios=16, dt=30.0, seed=0),
+                      ils_params=ILSParams(max_iteration=15, max_attempt=10,
+                                           seed=0))
+    assert (res.unfinished == 0).all()
+    assert res.deadline_met.mean() >= 0.8
+    assert (res.cost > 0).all()
