@@ -1,0 +1,110 @@
+"""Fleet pipeline benchmark: grid evaluation, sharded-batch vs cell loop.
+
+Evaluates a jobs × policies × market-processes grid two ways over the
+*same* pregenerated event tensors:
+
+* **loop** — one ``run_mc_events`` dispatch per grid cell (the only mode
+  the repo had before ``sim.fleet``: every process its own engine call);
+* **fleet** — processes concatenated along the scenario axis, one engine
+  call per (job, policy), the axis sharded across available devices
+  (single-device hosts fall back to the unsharded path, DESIGN.md §2.4).
+
+Both paths are timed warm (the compile is paid once, before timing) and
+produce identical per-scenario results, so the ``speedup`` column is pure
+dispatch/batching efficiency.  Per-cell distribution rows ride along so
+``results/BENCH_fleet.json`` doubles as a scenario-diversity record —
+how each policy degrades from Poisson to bursty Weibull to MMPP storms.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.dynamic import POLICIES, build_primary_map
+from repro.core.ils import ILSParams
+from repro.core.types import CloudConfig
+from repro.sim.fleet import (sample_grid_events, scenario_sharding,
+                             shard_events)
+from repro.sim.market import (EventTensor, MarkovModulatedProcess,
+                              PoissonProcess, WeibullProcess)
+from repro.sim.mc_engine import MCParams, run_mc_events
+from repro.sim.workloads import make_job
+
+ILS_FAST = ILSParams(max_iteration=25, max_attempt=15, seed=3)
+POLICY_GRID = ("burst-hads", "hads", "ils-ondemand")
+
+
+def process_grid(deadline_s: float) -> list:
+    """Poisson (Table V sc5) + two beyond-paper processes with a similar
+    event budget, so rows are comparable across the process axis."""
+    return [PoissonProcess(k_h=3.0, k_r=2.5, name="sc5"),
+            WeibullProcess(shape_h=0.7, scale_h=deadline_s / 3.0,
+                           shape_r=1.0, scale_r=deadline_s / 2.5,
+                           name="weibull"),
+            MarkovModulatedProcess(k_h_calm=0.5, k_h_turb=12.0, k_r=2.5,
+                                   name="mmpp")]
+
+
+def run(job_names: tuple[str, ...] = ("J60", "J80"),
+        s: int = 256, dt: float = 30.0) -> list[dict]:
+    cfg = CloudConfig()
+    params = MCParams(n_scenarios=s, dt=dt, seed=0)
+    rows: list[dict] = []
+    loop_wall = fleet_wall = 0.0
+    n_cells = 0
+    for job_name in job_names:
+        job = make_job(job_name)
+        procs = process_grid(job.deadline_s)
+        for pol_name in POLICY_GRID:
+            plan = build_primary_map(job, cfg, POLICIES[pol_name],
+                                     ILS_FAST, engine="batched")
+            evs = sample_grid_events(job, plan, procs, params)
+            ev_all = shard_events(EventTensor.concat(evs),
+                                  scenario_sharding(len(procs) * s))
+
+            # warm both paths (jit cache is keyed on shapes + policy)
+            run_mc_events(job, plan, cfg, evs[0], params)
+            res_all = run_mc_events(job, plan, cfg, ev_all, params)
+
+            t0 = time.perf_counter()
+            cell = [run_mc_events(job, plan, cfg, e, params) for e in evs]
+            t_loop = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            res_all = run_mc_events(job, plan, cfg, ev_all, params)
+            t_fleet = time.perf_counter() - t0
+            loop_wall += t_loop
+            fleet_wall += t_fleet
+            n_cells += len(procs)
+
+            for i, (proc, r) in enumerate(zip(procs, cell)):
+                sl = slice(i * s, (i + 1) * s)
+                assert np.allclose(r.cost, res_all.cost[sl]), \
+                    "fleet batch must reproduce the per-cell run"
+                rows.append({
+                    "table": "fleet", "job": job_name, "policy": pol_name,
+                    "process": proc.name, "s": s, "dt": dt,
+                    "cost_mean": round(float(r.cost.mean()), 4),
+                    "cost_p95": round(float(np.percentile(r.cost, 95)), 4),
+                    "mkp_mean": round(float(r.makespan.mean()), 1),
+                    "met_frac": round(float(r.deadline_met.mean()), 3),
+                    "hib_mean": round(float(r.n_hibernations.mean()), 2),
+                    "res_mean": round(float(r.n_resumes.mean()), 2),
+                })
+    total = n_cells * s
+    rows.append({
+        "table": "fleet_throughput", "grid_cells": n_cells, "s": s,
+        "scenarios_total": total,
+        "loop_scen_per_s": round(total / max(loop_wall, 1e-9), 1),
+        "fleet_scen_per_s": round(total / max(fleet_wall, 1e-9), 1),
+        "speedup": round(loop_wall / max(fleet_wall, 1e-9), 2),
+        "n_devices": len(jax.devices()),
+    })
+    return rows
+
+
+def smoke() -> list[dict]:
+    """CI-sized variant: same ≥2 jobs × 3 policies × 3 processes grid,
+    tiny scenario batch."""
+    return run(job_names=("J12", "J16"), s=8)

@@ -81,6 +81,16 @@ def main() -> None:
                     sim_bench.smoke() if args.smoke else sim_bench.run(), fh)
     _write_json(os.path.join(outdir, "BENCH_sim.json"), sim_rows)
 
+    print("# Market/fleet: jobs x policies x market-process grid "
+          "(sharded batch vs per-cell loop)")
+    from benchmarks import fleet_bench
+    fleet_rows = emit(
+        "fleet",
+        fleet_bench.smoke() if args.smoke
+        else fleet_bench.run(("J60",), s=64) if args.fast
+        else fleet_bench.run(), fh)
+    _write_json(os.path.join(outdir, "BENCH_fleet.json"), fleet_rows)
+
     if args.smoke:
         fh.close()
         print(f"# smoke ok, total {time.time() - t0:.0f}s -> {args.csv}")

@@ -1,0 +1,138 @@
+"""Doc-consistency gate: execute README code blocks, verify doc anchors.
+
+  PYTHONPATH=src python scripts/check_docs.py [--smoke]
+
+Three checks, any failure exits nonzero (CI runs this after tier-1 so the
+documentation can never silently rot):
+
+1. every fenced ```python block in README.md executes end-to-end, in one
+   shared namespace, inside a scratch directory (artifacts the docs write
+   never land in the repo).  ``--smoke`` first applies the substitutions
+   in ``SMOKE_SUBS`` (tiny jobs, tiny scenario batches, short ILS) so the
+   gate runs in CI time while exercising the same API surface;
+2. every `src/...` path named in README.md exists;
+3. every DESIGN.md section anchor cited anywhere in README.md or the
+   `src/repro/sim` docstrings (the `DESIGN.md §X[.Y]` convention) exists
+   as a heading in DESIGN.md.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+import tempfile
+import time
+import traceback
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: --smoke rewrites applied to README python blocks, in order.
+SMOKE_SUBS = [
+    (r"n_scenarios=\d+", "n_scenarios=8"),
+    (r'"J\d+"', '"J12"'),
+    (r"ILSParams\(seed=0\)",
+     "ILSParams(max_iteration=6, max_attempt=6, seed=0)"),
+]
+
+
+def extract_blocks(md: str, lang: str) -> list[tuple[int, str]]:
+    """(first line number, body) for each fenced ``lang`` block."""
+    out = []
+    fence = None
+    body: list[str] = []
+    for i, line in enumerate(md.splitlines(), 1):
+        if fence is None:
+            if line.strip() == f"```{lang}":
+                fence = i + 1
+                body = []
+        elif line.strip() == "```":
+            out.append((fence, "\n".join(body)))
+            fence = None
+        else:
+            body.append(line)
+    return out
+
+
+def check_python_blocks(md: str, smoke: bool) -> list[str]:
+    errors = []
+    blocks = extract_blocks(md, "python")
+    if not blocks:
+        return ["README.md has no python blocks — did the fences change?"]
+    ns: dict = {"__name__": "__readme__"}
+    cwd = os.getcwd()
+    with tempfile.TemporaryDirectory(prefix="check_docs_") as scratch:
+        os.makedirs(os.path.join(scratch, "results"))
+        os.chdir(scratch)
+        try:
+            for lineno, src in blocks:
+                if smoke:
+                    for pat, repl in SMOKE_SUBS:
+                        src = re.sub(pat, repl, src)
+                t0 = time.time()
+                try:
+                    exec(compile(src, f"README.md:{lineno}", "exec"), ns)
+                    print(f"  ok README.md:{lineno} "
+                          f"({time.time() - t0:.1f}s)")
+                except Exception:
+                    errors.append(
+                        f"README.md python block at line {lineno} failed:"
+                        f"\n{traceback.format_exc(limit=3)}")
+        finally:
+            os.chdir(cwd)
+    return errors
+
+
+def check_paths(md: str) -> list[str]:
+    paths = set(re.findall(r"`(src/[\w/.]+)`", md))
+    return [f"README.md names missing path {p}" for p in sorted(paths)
+            if not os.path.exists(os.path.join(REPO, p))]
+
+
+def check_design_anchors() -> list[str]:
+    with open(os.path.join(REPO, "DESIGN.md")) as f:
+        design = f.read()
+    headings = set(re.findall(r"^#+\s*(§[\d.]+)", design, re.M))
+    errors = []
+    sources = {"README.md": os.path.join(REPO, "README.md")}
+    sim_dir = os.path.join(REPO, "src", "repro", "sim")
+    for name in sorted(os.listdir(sim_dir)):
+        if name.endswith(".py"):
+            sources[f"sim/{name}"] = os.path.join(sim_dir, name)
+    for label, path in sources.items():
+        with open(path) as f:
+            text = f.read()
+        for ref in re.findall(r"DESIGN\.md (§[\d.]+)", text):
+            anchor = ref.rstrip(".")
+            if anchor not in headings:
+                errors.append(f"{label} cites DESIGN.md {anchor}, which "
+                              f"has no heading in DESIGN.md")
+    if not headings:
+        errors.append("DESIGN.md has no § headings — anchor check broken")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink README examples to CI size before running")
+    args = ap.parse_args()
+    sys.path.insert(0, os.path.join(REPO, "src"))
+
+    with open(os.path.join(REPO, "README.md")) as f:
+        md = f.read()
+    errors = check_paths(md) + check_design_anchors()
+    print(f"# structural checks: {'ok' if not errors else 'FAILED'}")
+    errors += check_python_blocks(md, smoke=args.smoke)
+    if errors:
+        print(f"\n# DOCS DRIFT ({len(errors)} problem(s)):",
+              file=sys.stderr)
+        for e in errors:
+            print(f"- {e}", file=sys.stderr)
+        return 1
+    print("# docs consistent")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -70,8 +70,26 @@ class PrimaryPlan:
 
 
 def build_primary_map(job: Job, cfg: CloudConfig, policy: PolicyConfig,
-                      params: ILSParams = ILSParams()) -> PrimaryPlan:
-    """Algorithm 1 end-to-end for the chosen policy."""
+                      params: ILSParams = ILSParams(),
+                      engine: str = "exact") -> PrimaryPlan:
+    """Algorithm 1 end-to-end for the chosen policy.
+
+    ``engine`` selects the ILS search backing the primary map:
+    ``"exact"`` is the paper's sequential chain (``core.ils``, exact
+    packer fitness); ``"batched"`` hands off to the device-resident
+    population search (``core.ils_jax.run_batched_ils``) — the static
+    phase the fleet pipeline (``sim.fleet``) uses so the whole
+    plan→distribution flow stays on device.  Both return the same
+    ``PrimaryPlan`` shape; burstable allocation and D_spot are shared.
+
+    The two searches have different knob sets: under ``"batched"`` only
+    ``max_iteration`` (→ iterations), ``alpha`` and ``seed`` carry over
+    from ``params``; ``max_attempt``/``swap_rate``/``max_failed``/
+    ``relax_rate`` have no batched equivalent and population/proposal
+    sizes use the ``BatchedILSParams`` defaults — construct
+    ``core.ils_jax.BatchedILSParams`` and call ``run_batched_ils``
+    directly to control them.
+    """
     pool = cfg.instance_pool()
     if policy.market == Market.SPOT:
         dspot = compute_dspot(job.deadline_s, job.tasks, cfg)
@@ -79,9 +97,19 @@ def build_primary_map(job: Job, cfg: CloudConfig, policy: PolicyConfig,
         dspot = job.deadline_s  # on-demand VMs don't hibernate
 
     if policy.primary == "ils":
-        res = run_ils(job.tasks, pool, cfg, dspot, job.deadline_s, params,
-                      market=policy.market)
-        sol = res.solution
+        if engine == "batched":
+            from .ils_jax import BatchedILSParams, run_batched_ils
+            bp = BatchedILSParams(iterations=params.max_iteration,
+                                  alpha=params.alpha, seed=params.seed)
+            sol = run_batched_ils(job.tasks, pool, cfg, dspot,
+                                  job.deadline_s, bp,
+                                  market=policy.market).solution
+        elif engine == "exact":
+            sol = run_ils(job.tasks, pool, cfg, dspot, job.deadline_s,
+                          params, market=policy.market).solution
+        else:
+            raise ValueError(f"unknown ILS engine {engine!r} "
+                             "(exact/batched)")
     else:
         sol = initial_solution(job.tasks, pool, cfg, dspot,
                                market=policy.market)

@@ -1,3 +1,8 @@
+from .market import (CorrelatedShockProcess, EventTensor,  # noqa: F401
+                     MarketProcess, MarkovModulatedProcess, PoissonProcess,
+                     TraceReplayProcess, WeibullProcess, as_process,
+                     default_process_grid)
 from .mc_engine import (MCParams, MCResult, mc_sweep, run_mc,  # noqa: F401
-                        simulate_mc)
+                        run_mc_events, simulate_mc)
+from .fleet import FleetResult, evaluate_fleet  # noqa: F401
 from .workloads import make_job, J60, J80, J100, ED200  # noqa: F401

@@ -1,4 +1,13 @@
-"""Event definitions + Poisson hibernation/resume scenarios (Table V)."""
+"""Event definitions + Poisson hibernation/resume scenarios (paper Table V).
+
+Implements the event vocabulary of the dynamic phase (§III-D) consumed by
+the discrete-event simulator (``sim.simulator``) and the Table V scenario
+catalog shared by both engines.  The stochastic *generators* live in
+``sim.market`` (DESIGN.md §2.4): ``sample_market_events`` below is a thin
+delegate kept for backward compatibility — ``market.py`` is the single
+source of truth for market-event sampling, in both its numpy event-list
+form (DES) and its ``[S, n_slots, V]`` tensor form (MC engine).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -66,20 +75,8 @@ SCENARIOS = {s.name: s for s in (SC_NONE, SC1, SC2, SC3, SC4, SC5)}
 def sample_market_events(scenario: Scenario, horizon_s: float,
                          rng: np.random.Generator
                          ) -> list[tuple[float, EventKind]]:
-    """Poisson processes with rates k_h/D and k_r/D over [0, D].
-
-    The victim/beneficiary VM is chosen at fire time by the simulator (a
-    random active spot VM / random hibernated VM); events that find no
-    eligible VM are skipped, which is why the realised counts in Table VI
-    fall below k_h — our generator reproduces that behaviour.
-    """
-    out: list[tuple[float, EventKind]] = []
-    for k, kind in ((scenario.k_h, EventKind.HIBERNATE),
-                    (scenario.k_r, EventKind.RESUME)):
-        if k <= 0:
-            continue
-        n = rng.poisson(k)
-        for t in rng.uniform(0.0, horizon_s, size=n):
-            out.append((float(t), kind))
-    out.sort()
-    return out
+    """Delegates to ``sim.market.sample_market_events`` (single source of
+    truth for market-event sampling; lazy import avoids the circular
+    dependency — ``market`` imports ``Scenario`` from this module)."""
+    from .market import sample_market_events as _impl
+    return _impl(scenario, horizon_s, rng)

@@ -1,0 +1,170 @@
+"""Fleet evaluation pipeline — jobs × policies × market processes, one flow.
+
+The two engines the repo grew separately — the batched ILS static phase
+(``core.ils_jax``, DESIGN.md §2.1) and the batched Monte-Carlo dynamic
+phase (``sim.mc_engine``, §2.3) — compose here into one policy-evaluation
+system: ``evaluate_fleet`` plans every (job, policy) cell once (Algorithm
+1 with the device-resident ILS by default), samples an event tensor per
+market process (§2.4), **concatenates the processes along the scenario
+axis** so each (job, policy) costs a single engine call over
+``n_processes · S`` scenarios, and shards that axis across available
+devices with ``jax.sharding`` (single-device CPU hosts fall back to the
+unsharded path transparently — the engine is agnostic, see
+``run_mc_events``).  The result is a tidy rows table, one row per
+(job, policy, process) cell, plus throughput metadata;
+``benchmarks/fleet_bench.py`` tracks it as ``results/BENCH_fleet.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.core.dynamic import POLICIES, build_primary_map
+from repro.core.ils import ILSParams
+from repro.core.types import CloudConfig, Job
+from .market import EventTensor, as_process
+from .mc_engine import (MCParams, dist_stats, n_slots_for,
+                        plan_column_uids, run_mc_events)
+from .workloads import make_job
+
+
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Tidy per-(job, policy, process) rows + pipeline metadata."""
+
+    rows: list[dict]
+    wall_s: float           # end-to-end, including planning
+    mc_wall_s: float        # engine calls only (throughput numerator)
+    plan_wall_s: float
+    n_devices: int
+    sharded: bool
+    plan_engine: str
+
+    @property
+    def total_scenarios(self) -> int:
+        return sum(r["s"] for r in self.rows)
+
+    @property
+    def scen_per_s(self) -> float:
+        return self.total_scenarios / max(self.mc_wall_s, 1e-9)
+
+    def meta(self) -> dict:
+        return {"wall_s": round(self.wall_s, 3),
+                "mc_wall_s": round(self.mc_wall_s, 3),
+                "plan_wall_s": round(self.plan_wall_s, 3),
+                "total_scenarios": self.total_scenarios,
+                "scen_per_s": round(self.scen_per_s, 1),
+                "n_devices": self.n_devices, "sharded": self.sharded,
+                "plan_engine": self.plan_engine}
+
+    def write_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({"generated_by": "repro.sim.fleet",
+                       "meta": self.meta(), "rows": self.rows}, f, indent=2)
+
+
+def scenario_sharding(n_scenarios: int):
+    """NamedSharding over the scenario axis, or None on a single device or
+    when the device count does not divide S (replicated fallback)."""
+    devs = jax.devices()
+    if len(devs) <= 1 or n_scenarios % len(devs) != 0:
+        return None
+    return NamedSharding(Mesh(np.array(devs), ("s",)), PartitionSpec("s"))
+
+
+def shard_events(ev: EventTensor, sharding) -> EventTensor:
+    """Place an event tensor with its scenario axis split across devices;
+    the engine state (all ``[S, ...]``) follows by GSPMD propagation."""
+    if sharding is None:
+        return ev
+    s3 = NamedSharding(sharding.mesh, PartitionSpec("s", None, None))
+    return EventTensor(jax.device_put(ev.hib_k, sharding),
+                       jax.device_put(ev.hib_u, s3),
+                       jax.device_put(ev.res_k, sharding),
+                       jax.device_put(ev.res_u, s3))
+
+
+def sample_grid_events(job: Job, plan, processes, params: MCParams
+                       ) -> list[EventTensor]:
+    """One tensor per process for this (job, plan) cell.  Process ``i``
+    draws from ``fold_in(PRNGKey(params.seed), i)`` so cells are
+    reproducible and processes are independent."""
+    v = len(plan_column_uids(plan))
+    n = n_slots_for(job.deadline_s, params)
+    base = jax.random.PRNGKey(params.seed)
+    return [p.sample(jax.random.fold_in(base, i), s=params.n_scenarios,
+                     n_slots=n, v=v, dt=params.dt,
+                     deadline_s=job.deadline_s)
+            for i, p in enumerate(processes)]
+
+
+def evaluate_fleet(jobs, policies, processes,
+                   cfg: CloudConfig | None = None,
+                   params: MCParams = MCParams(n_scenarios=64),
+                   ils_params: ILSParams | None = None,
+                   plan_engine: str = "batched",
+                   shard: bool = True) -> FleetResult:
+    """Evaluate every (job, policy, market process) cell of the grid.
+
+    ``jobs``: Job objects or names (``make_job``); ``policies``:
+    PolicyConfig or names from ``core.dynamic.POLICIES``; ``processes``:
+    MarketProcess / Table V Scenario / scenario names.  Per (job, policy)
+    the static map is planned once (``plan_engine``: "batched" =
+    ``run_batched_ils`` hand-off, "exact" = the paper's sequential chain)
+    and all processes run as one concatenated, scenario-sharded engine
+    call.  Returns one row per cell with cost/makespan distribution
+    summaries and deadline-met fractions.
+    """
+    cfg = cfg or CloudConfig()
+    jobs = [make_job(j) if isinstance(j, str) else j for j in jobs]
+    policies = [POLICIES[p] if isinstance(p, str) else p for p in policies]
+    processes = [as_process(p) for p in processes]
+    if not (jobs and policies and processes):
+        raise ValueError("evaluate_fleet needs ≥1 job, policy and process")
+    ils_params = ils_params or ILSParams(seed=params.seed)
+
+    s = params.n_scenarios
+    sharding = scenario_sharding(len(processes) * s) if shard else None
+    rows: list[dict] = []
+    t_start = time.perf_counter()
+    plan_wall = mc_wall = 0.0
+    for job in jobs:
+        for policy in policies:
+            t0 = time.perf_counter()
+            plan = build_primary_map(job, cfg, policy, ils_params,
+                                     engine=plan_engine)
+            plan_wall += time.perf_counter() - t0
+            evs = sample_grid_events(job, plan, processes, params)
+            ev_all = shard_events(EventTensor.concat(evs), sharding)
+            t0 = time.perf_counter()
+            res = run_mc_events(job, plan, cfg, ev_all, params,
+                                label="fleet")
+            mc_wall += time.perf_counter() - t0
+            for i, proc in enumerate(processes):
+                sl = slice(i * s, (i + 1) * s)
+                rows.append({
+                    "job": job.name, "policy": policy.name,
+                    "process": proc.name, "s": s, "dt": params.dt,
+                    "n_vms": len(res.vm_uids),
+                    "cost": dist_stats(res.cost[sl]),
+                    "makespan": dist_stats(res.makespan[sl]),
+                    "deadline_met_frac":
+                        float(np.mean(res.deadline_met[sl])),
+                    "unfinished_frac":
+                        float(np.mean(res.unfinished[sl] > 0)),
+                    "mean_hibernations":
+                        float(np.mean(res.n_hibernations[sl])),
+                    "mean_resumes": float(np.mean(res.n_resumes[sl])),
+                })
+    return FleetResult(rows=rows, wall_s=time.perf_counter() - t_start,
+                       mc_wall_s=mc_wall, plan_wall_s=plan_wall,
+                       n_devices=len(jax.devices()),
+                       sharded=sharding is not None,
+                       plan_engine=plan_engine)

@@ -37,8 +37,19 @@ max remaining task — is the ``mc_vm_stats`` Pallas kernel
 one-hot/cumsum pass on CPU; event handling (migration, stealing,
 termination) is hoisted behind ``lax.cond`` on batch-wide predicates so
 the common no-event slot touches only the progress/billing path.
-Slot-discretization error bounds and the DES parity contract are
-documented in DESIGN.md §2.3.
+
+Market events are **not sampled inline**: the engine consumes a
+pregenerated ``sim.market.EventTensor`` (``[S, n_slots]`` request counts +
+``[S, n_slots, V]`` priority scores, DESIGN.md §2.4) and resolves each
+slot's requested victims/beneficiaries against live eligibility with one
+top-k rank pass.  Any stochastic process — Table V Poisson, Weibull
+renewal, Markov-modulated storms, correlated mass shocks, empirical trace
+replay — therefore drives this same jitted engine unchanged, and the
+engine itself is fully deterministic given the tensor.  ``run_mc``
+generates the tensor from a process (or legacy Table V scenario) and
+delegates to ``run_mc_events``, the raw-tensor entry point the fleet
+pipeline (``sim.fleet``) batches over.  Slot-discretization error bounds
+and the DES parity contract are documented in DESIGN.md §2.3.
 """
 from __future__ import annotations
 
@@ -58,11 +69,20 @@ from repro.core.runtime import CHECKPOINT_WRITE_S
 from repro.core.types import CloudConfig, Job, Market
 from repro.kernels.sched_fitness.ops import mc_vm_stats
 from .events import SC_NONE, Scenario
+from .market import EventTensor, MarketProcess, as_process
 
 BIG = 1e30
 
 #: VM column lifecycle codes (``vstate``)
 NOT_LAUNCHED, VM_ACTIVE, VM_HIBERNATED, VM_TERMINATED = 0, 1, 2, 3
+
+
+def dist_stats(x: np.ndarray) -> dict:
+    """mean/std/ci95/p95 summary — shared by ``MCResult.summary`` and the
+    fleet rows so every results table reports identical statistics."""
+    m, sd = float(np.mean(x)), float(np.std(x))
+    return {"mean": m, "std": sd, "ci95": 1.96 * sd / max(1, len(x)) ** 0.5,
+            "p95": float(np.percentile(x, 95))}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,14 +124,9 @@ class MCResult:
         return len(self.cost)
 
     def summary(self) -> dict:
-        def stats(x: np.ndarray) -> dict:
-            m, sd = float(np.mean(x)), float(np.std(x))
-            return {"mean": m, "std": sd,
-                    "ci95": 1.96 * sd / max(1, len(x)) ** 0.5,
-                    "p95": float(np.percentile(x, 95))}
         return {"policy": self.policy, "scenario": self.scenario,
-                "n": self.n, "cost": stats(self.cost),
-                "makespan": stats(self.makespan),
+                "n": self.n, "cost": dist_stats(self.cost),
+                "makespan": dist_stats(self.makespan),
                 "deadline_met_frac": float(np.mean(self.deadline_met)),
                 "mean_hibernations": float(np.mean(self.n_hibernations)),
                 "mean_resumes": float(np.mean(self.n_resumes))}
@@ -120,22 +135,37 @@ class MCResult:
 # ---------------------------------------------------------------------------
 # Problem arrays
 # ---------------------------------------------------------------------------
+def plan_column_uids(plan: PrimaryPlan) -> list[int]:
+    """Column -> VMInstance.uid map of a plan's launchable instances: the
+    primary map's VMs plus every on-demand instance Alg. 4 may launch
+    dynamically.  Shared with ``sim.fleet``, which needs the column count
+    V to size event tensors before the engine runs."""
+    pool = plan.solution.pool
+    return sorted(set(plan.solution.selected_uids) |
+                  {vm.uid for vm in pool if vm.market == Market.ONDEMAND})
+
+
+def n_slots_for(deadline_s: float, params: MCParams) -> int:
+    """Tensor/time horizon in slots — the engine runs to
+    ``horizon_mult * deadline`` like the DES."""
+    return int(math.ceil(deadline_s * params.horizon_mult / params.dt))
+
+
 def _plan_arrays(job: Job, plan: PrimaryPlan, cfg: CloudConfig, ovh: float
                  ) -> tuple[dict, list[int]]:
     """Flatten (job, plan) into the engine's column/task arrays.
 
-    Columns are the *launchable* instances only: the primary map's VMs plus
-    every on-demand instance Alg. 4 may launch dynamically (unselected spot
-    and burstable instances can never enter a run).  The task axis is
-    permuted to the DES dispatch order — packed start time, tid tie-break —
-    so the per-column rank order reproduces each VM's queue order.
+    Columns are the *launchable* instances only (``plan_column_uids`` —
+    unselected spot and burstable instances can never enter a run).  The
+    task axis is permuted to the DES dispatch order — packed start time,
+    tid tie-break — so the per-column rank order reproduces each VM's
+    queue order.
     """
     sol = plan.solution
     pool = sol.pool
     per_vm = pack_solution(sol, job.tasks, cfg)
     assert per_vm is not None, "primary map must be packable"
-    uids = sorted(set(sol.selected_uids) |
-                  {vm.uid for vm in pool if vm.market == Market.ONDEMAND})
+    uids = plan_column_uids(plan)
     col_of = {u: c for c, u in enumerate(uids)}
 
     b = job.n_tasks
@@ -184,8 +214,10 @@ def _plan_arrays(job: Job, plan: PrimaryPlan, cfg: CloudConfig, ovh: float
     return arr, uids
 
 
-def _scalars(job: Job, cfg: CloudConfig, scenario: Scenario,
-             params: MCParams) -> dict:
+def _scalars(job: Job, cfg: CloudConfig, params: MCParams,
+             n_slots: int) -> dict:
+    """Engine scalars.  Event probabilities no longer appear here — the
+    market process bakes them into the event tensor (DESIGN.md §2.4)."""
     d = job.deadline_s
     dt = params.dt
     od_speed = min(t.gflops for t in cfg.ondemand_types) / cfg.gflops_ref
@@ -197,11 +229,9 @@ def _scalars(job: Job, cfg: CloudConfig, scenario: Scenario,
         "bperiod": jnp.float32(cfg.burst_period_s),
         "margin": jnp.float32(params.hads_margin_s),
         "od_speed": jnp.float32(od_speed),
-        "ph": jnp.float32(min(1.0, scenario.k_h * dt / d)),
-        "pr": jnp.float32(min(1.0, scenario.k_r * dt / d)),
         "boot_slots": jnp.int32(round(cfg.boot_overhead_s / dt)),
         "ac_slots": jnp.int32(round(cfg.allocation_cycle_s / dt)),
-        "max_slots": jnp.int32(math.ceil(d * params.horizon_mult / dt)),
+        "max_slots": jnp.int32(n_slots),
     }
 
 
@@ -287,11 +317,19 @@ def _migrate_spread(do_ev, aff, rem, load, vstate, boot, credits, assign,
     return rem, assign, mode, vstate, boot, rcv
 
 
-def _pick(key, elig):
-    """Uniform choice among eligible columns per scenario (Gumbel-max)."""
-    u = jax.random.uniform(key, elig.shape)
-    return (jnp.argmax(jnp.where(elig, u, -1.0), axis=1).astype(jnp.int32),
-            jnp.any(elig, axis=1))
+def _select(u, elig, k):
+    """Resolve one slot of the event-tensor contract (DESIGN.md §2.4):
+    the top-``k[s]`` *eligible* columns by priority score, ties toward the
+    lower index; a negative score opts a column out regardless of rank.
+    With uniform scores and k=1 this is exactly the legacy Gumbel-max
+    'random eligible column' pick (argmax of where(elig, u, -1))."""
+    score = jnp.where(elig, u, -1.0)
+    iota = jnp.arange(score.shape[1])
+    beats = (score[:, None, :] > score[:, :, None]) | \
+        ((score[:, None, :] == score[:, :, None]) &
+         (iota[None, None, :] < iota[None, :, None]))
+    rank = jnp.sum(beats, axis=2)          # [S, V] columns scoring higher
+    return elig & (u >= 0.0) & (rank < k[:, None])
 
 
 # ---------------------------------------------------------------------------
@@ -300,9 +338,9 @@ def _pick(key, elig):
 @functools.partial(jax.jit, static_argnames=(
     "s", "policy", "steal_rounds", "mig_rounds", "mem_safe", "use_kernel",
     "interpret"))
-def _mc_run(arr: dict, sc: dict, key, *, s: int, policy: PolicyConfig,
-            steal_rounds: int, mig_rounds: int, mem_safe: bool,
-            use_kernel: bool, interpret: bool) -> dict:
+def _mc_run(arr: dict, sc: dict, ev: EventTensor, *, s: int,
+            policy: PolicyConfig, steal_rounds: int, mig_rounds: int,
+            mem_safe: bool, use_kernel: bool, interpret: bool) -> dict:
     total, mem_t = arr["total"], arr["mem_t"]
     price, cores, speed = arr["price"], arr["cores"], arr["speed"]
     bfrac, memv = arr["bfrac"], arr["memv"]
@@ -316,7 +354,6 @@ def _mc_run(arr: dict, sc: dict, key, *, s: int, policy: PolicyConfig,
     launched0 = arr["launched0"]
     carry = (
         jnp.int32(0),                                             # slot i
-        key,
         jnp.tile(jnp.where(launched0, VM_ACTIVE,
                            NOT_LAUNCHED).astype(jnp.int32)[None], (s, 1)),
         jnp.tile(jnp.where(launched0, sc["omega"], BIG)[None], (s, 1)),
@@ -332,14 +369,18 @@ def _mc_run(arr: dict, sc: dict, key, *, s: int, policy: PolicyConfig,
     )
 
     def cond(c):
-        return (c[0] < sc["max_slots"]) & jnp.any(c[6] > 0.0)
+        return (c[0] < sc["max_slots"]) & jnp.any(c[5] > 0.0)
 
     def step(c):
-        (i, key, vstate, boot, billed, credits, rem, assign, mode, done_at,
+        (i, vstate, boot, billed, credits, rem, assign, mode, done_at,
          nhib, nres) = c
         t = i.astype(jnp.float32) * dt     # slot covers [t, t + dt)
         t1 = t + dt
-        key, kh, kv, kr, kw = jax.random.split(key, 5)
+        # this slot's pregenerated market events (DESIGN.md §2.4)
+        hib_k = jax.lax.dynamic_index_in_dim(ev.hib_k, i, 1, keepdims=False)
+        hib_u = jax.lax.dynamic_index_in_dim(ev.hib_u, i, 1, keepdims=False)
+        res_k = jax.lax.dynamic_index_in_dim(ev.res_k, i, 1, keepdims=False)
+        res_u = jax.lax.dynamic_index_in_dim(ev.res_u, i, 1, keepdims=False)
 
         pending = rem > 0.0
         gate = jnp.any(pending, axis=1)                       # [S] live
@@ -404,18 +445,17 @@ def _mc_run(arr: dict, sc: dict, key, *, s: int, policy: PolicyConfig,
 
         rcv = jnp.zeros((s, v), bool)      # columns given tasks this slot
 
-        # ---- hibernation event (victim: random active booted spot) ------
-        ev_h = (jax.random.uniform(kh, (s,)) < sc["ph"]) & \
-            (t < sc["deadline"]) & gate
-        victim, has_v = _pick(kv, active & spot[None] & (boot <= t1))
-        do_hib = ev_h & has_v
-        nhib = nhib + do_hib
-        vstate = jnp.where(do_hib[:, None] & (iota_v == victim[:, None]),
-                           VM_HIBERNATED, vstate)
+        # ---- hibernation events (victims: requested count resolved
+        # against the live eligible set — active, booted, spot) -----------
+        hib = _select(hib_u, active & spot[None] & (boot <= t1), hib_k) & \
+            gate[:, None]
+        do_hib = jnp.any(hib, axis=1)
+        nhib = nhib + jnp.sum(hib, axis=1)
+        vstate = jnp.where(hib, VM_HIBERNATED, vstate)
 
         if policy.immediate_migration:
             # Alg. 4: checkpoint rollback + spread argmin re-assignment
-            affected = do_hib[:, None] & (assign == victim[:, None]) & \
+            affected = jnp.take_along_axis(hib, assign, axis=1) & \
                 (rem2 > 0)
 
             def mig(ops):
@@ -435,14 +475,10 @@ def _mc_run(arr: dict, sc: dict, key, *, s: int, policy: PolicyConfig,
         # else: freeze in place (HADS) — tasks stay attached, no progress
         # while the column is hibernated, exact progress preserved.
 
-        # ---- resume event (beneficiary: random hibernated column) -------
-        ev_r = (jax.random.uniform(kr, (s,)) < sc["pr"]) & \
-            (t < sc["deadline"]) & gate
-        res_col, has_r = _pick(kw, vstate == VM_HIBERNATED)
-        do_res = ev_r & has_r
-        nres = nres + do_res
-        vstate = jnp.where(do_res[:, None] & (iota_v == res_col[:, None]),
-                           VM_ACTIVE, vstate)
+        # ---- resume events (beneficiaries among hibernated columns) -----
+        res = _select(res_u, vstate == VM_HIBERNATED, res_k) & gate[:, None]
+        nres = nres + jnp.sum(res, axis=1)
+        vstate = jnp.where(res, VM_ACTIVE, vstate)
 
         if policy.freeze_in_place:
             # deferred-HADS migration at the latest safe instant
@@ -514,11 +550,11 @@ def _mc_run(arr: dict, sc: dict, key, *, s: int, policy: PolicyConfig,
         (vstate, assign, mode) = jax.lax.cond(
             is_ac, ac_block, lambda ops: ops, (vstate, assign, mode))
 
-        return (i1, key, vstate, boot, billed, credits, rem2, assign, mode,
+        return (i1, vstate, boot, billed, credits, rem2, assign, mode,
                 done_at, nhib, nres)
 
     out = jax.lax.while_loop(cond, step, carry)
-    (_, _, _, _, billed, _, rem, _, _, done_at, nhib, nres) = out
+    (_, _, _, billed, _, rem, _, _, done_at, nhib, nres) = out
     makespan = jnp.max(jnp.where(done_at < BIG * 0.5, done_at, 0.0), axis=1)
     return {"cost": jnp.sum(billed * price[None], axis=1),
             "makespan": makespan,
@@ -529,17 +565,37 @@ def _mc_run(arr: dict, sc: dict, key, *, s: int, policy: PolicyConfig,
 # ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
-def run_mc(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
-           scenario: Scenario = SC_NONE,
-           params: MCParams = MCParams()) -> MCResult:
-    """Run S Monte-Carlo scenarios of (job, plan, policy, scenario)."""
+def _check_dt(cfg: CloudConfig, params: MCParams) -> None:
     for name, q in (("boot overhead", cfg.boot_overhead_s),
                     ("allocation cycle", cfg.allocation_cycle_s)):
         if abs(q / params.dt - round(q / params.dt)) > 1e-9:
             raise ValueError(f"dt={params.dt} must divide the {name} ({q}s) "
                              f"so AC boundaries land on slot edges")
+
+
+def run_mc_events(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
+                  ev: EventTensor, params: MCParams = MCParams(),
+                  label: str = "custom") -> MCResult:
+    """Run the dynamic phase over a pregenerated event tensor.
+
+    The tensor defines the run: S scenarios (``params.n_scenarios`` is
+    ignored here), a V axis that must match the plan's launchable columns,
+    and a slot horizon the engine runs to (events never fire past the
+    deadline by the tensor contract, but the run continues to the tensor's
+    horizon so late scenarios finish).  ``ev`` may carry any
+    ``jax.sharding`` placement on the scenario axis — the engine's state
+    is batched over S, so GSPMD shards the whole run with it
+    (``sim.fleet`` uses this to spread a grid across devices).
+    """
+    _check_dt(cfg, params)
     arr, uids = _plan_arrays(job, plan, cfg, params.ovh)
-    sc = _scalars(job, cfg, scenario, params)
+    ev.validate()
+    if ev.n_vms != len(uids):
+        raise ValueError(
+            f"event tensor has V={ev.n_vms} columns, plan has "
+            f"{len(uids)} launchable instances — regenerate the tensor "
+            f"for this plan (see plan_column_uids)")
+    sc = _scalars(job, cfg, params, ev.n_slots)
     # memory can never bind: even a full complement of the largest tasks
     # fits every column -> skip the per-slot memory-cumsum pass
     mem_safe = bool(float(np.max(np.asarray(arr["mem_t"])))
@@ -549,8 +605,7 @@ def run_mc(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
     use_kernel = params.use_kernel if params.use_kernel is not None \
         else not on_cpu
     interpret = params.interpret if params.interpret is not None else on_cpu
-    out = _mc_run(arr, sc, jax.random.PRNGKey(params.seed),
-                  s=params.n_scenarios, policy=plan.policy,
+    out = _mc_run(arr, sc, ev, s=ev.n_scenarios, policy=plan.policy,
                   steal_rounds=params.steal_rounds,
                   mig_rounds=params.mig_rounds, mem_safe=mem_safe,
                   use_kernel=use_kernel, interpret=interpret)
@@ -559,7 +614,7 @@ def run_mc(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
     makespan = out["makespan"]
     met = (unfinished == 0) & (makespan <= job.deadline_s + params.dt + 1e-6)
     return MCResult(
-        policy=plan.policy.name, scenario=scenario.name, dt=params.dt,
+        policy=plan.policy.name, scenario=label, dt=params.dt,
         deadline_s=job.deadline_s,
         cost=out["cost"], makespan=makespan, deadline_met=met,
         unfinished=unfinished,
@@ -568,9 +623,29 @@ def run_mc(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
         billed_s=out["billed"], vm_uids=list(uids))
 
 
+def run_mc(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
+           scenario: Scenario | MarketProcess | str = SC_NONE,
+           params: MCParams = MCParams()) -> MCResult:
+    """Run S Monte-Carlo scenarios of (job, plan, policy, market process).
+
+    ``scenario`` accepts a Table V ``Scenario`` (or its name) — mapped to
+    the bit-compatible ``market.PoissonProcess`` — or any
+    ``market.MarketProcess``.  The process is sampled into an event tensor
+    for this plan's columns and handed to ``run_mc_events``.
+    """
+    process = as_process(scenario)
+    _check_dt(cfg, params)
+    ev = process.sample(
+        jax.random.PRNGKey(params.seed), s=params.n_scenarios,
+        n_slots=n_slots_for(job.deadline_s, params),
+        v=len(plan_column_uids(plan)), dt=params.dt,
+        deadline_s=job.deadline_s)
+    return run_mc_events(job, plan, cfg, ev, params, label=process.name)
+
+
 def simulate_mc(job: Job, cfg: CloudConfig,
                 policy: PolicyConfig = BURST_HADS,
-                scenario: Scenario = SC_NONE,
+                scenario: Scenario | MarketProcess | str = SC_NONE,
                 params: MCParams = MCParams(),
                 ils_params: ILSParams | None = None) -> MCResult:
     """Plan (Algorithm 1) once, then Monte-Carlo the dynamic phase."""
@@ -582,17 +657,18 @@ def simulate_mc(job: Job, cfg: CloudConfig,
 def mc_sweep(job: Job, cfg: CloudConfig, policies, scenarios=None,
              params: MCParams = MCParams(),
              ils_params: ILSParams | None = None) -> list[dict]:
-    """Summaries for each (policy, scenario) pair — one plan per policy,
-    one batched MC run per scenario."""
-    from .events import SCENARIOS
+    """Summaries for each (policy, market process) pair — one plan per
+    policy, one batched MC run per process.  ``scenarios`` entries may be
+    Table V names, ``Scenario`` objects, or any ``market.MarketProcess``;
+    default is each policy's own Table V sweep."""
     ils_params = ils_params or ILSParams(seed=params.seed)
     rows = []
     for policy in policies:
         plan = build_primary_map(job, cfg, policy, ils_params)
-        names = scenarios if scenarios is not None else \
+        specs = scenarios if scenarios is not None else \
             policy.scenario_names()
-        for name in names:
-            res = run_mc(job, plan, cfg, scenario=SCENARIOS[name],
+        for spec in specs:
+            res = run_mc(job, plan, cfg, scenario=as_process(spec),
                          params=params)
             rows.append(res.summary())
     return rows

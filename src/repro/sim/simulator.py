@@ -1,8 +1,13 @@
 """Discrete-event cloud simulator executing a Burst-HADS primary map.
 
-Glues the runtime state (``repro.core.runtime``) to the dynamic policies
-(Alg. 4 migration, Alg. 5 work-stealing, AC termination, deferred HADS
-migration) under the Poisson hibernation scenarios of Table V.
+Implements the paper's dynamic scheduling module (§III-D) as a classic
+single-trace DES: glues the runtime state (``repro.core.runtime``) to the
+dynamic policies (Alg. 4 migration, Alg. 5 work-stealing, AC termination,
+deferred HADS migration) under the Poisson hibernation scenarios of
+Table V (event lists sampled by ``sim.market.sample_market_events`` via
+``sim.events``).  It is the exact oracle the batched Monte-Carlo engine
+is pinned against — parity contract and the engines' regime split
+(S=1: DES wins; distributions: MC wins) in DESIGN.md §2.3.
 
 Semantics reproduced from the paper:
   * VM boots cost ω seconds; billing starts *after* boot and pauses during

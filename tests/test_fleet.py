@@ -1,0 +1,131 @@
+"""Fleet evaluation pipeline: grid coverage, batch==loop parity, sharding.
+
+The concat-along-S trick must be invisible in the results: every
+(job, policy, process) row of ``evaluate_fleet`` has to equal the
+standalone ``run_mc_events`` run over that cell's own tensor.  Sharding
+correctness is checked in a subprocess with two forced host devices
+(``XLA_FLAGS``), since device count is fixed at jax import time.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.dynamic import BURST_HADS, HADS, build_primary_map
+from repro.core.ils import ILSParams
+from repro.core.types import CloudConfig
+from repro.sim.fleet import evaluate_fleet, sample_grid_events
+from repro.sim.market import WeibullProcess, as_process
+from repro.sim.mc_engine import MCParams, run_mc_events
+from repro.sim.workloads import make_job
+
+CFG = CloudConfig()
+FAST = ILSParams(max_iteration=8, max_attempt=8, seed=3)
+PARAMS = MCParams(n_scenarios=8, dt=30.0, seed=5)
+PROCS = ["sc5", WeibullProcess(shape_h=0.7, scale_h=900.0, name="wb")]
+
+
+@pytest.fixture(scope="module")
+def fleet_result():
+    return evaluate_fleet(["J12", "J16"], ["burst-hads", "hads"], PROCS,
+                          cfg=CFG, params=PARAMS, ils_params=FAST,
+                          plan_engine="batched")
+
+
+def test_grid_coverage(fleet_result):
+    rows = fleet_result.rows
+    assert len(rows) == 2 * 2 * 2
+    cells = {(r["job"], r["policy"], r["process"]) for r in rows}
+    assert ("J12", "burst-hads", "sc5") in cells
+    assert ("J16", "hads", "wb") in cells
+    for r in rows:
+        assert r["s"] == PARAMS.n_scenarios
+        assert 0.0 <= r["deadline_met_frac"] <= 1.0
+        assert r["cost"]["mean"] > 0.0 and r["makespan"]["mean"] > 0.0
+    assert fleet_result.total_scenarios == 8 * len(rows)
+    assert fleet_result.scen_per_s > 0
+
+
+def test_fleet_rows_match_per_cell_runs(fleet_result):
+    """Concatenating processes along S must not change any cell: rerun
+    one (job, policy) cell standalone and compare distributions."""
+    job = make_job("J12")
+    plan = build_primary_map(job, CFG, BURST_HADS, FAST, engine="batched")
+    evs = sample_grid_events(job, plan,
+                             [as_process(p) for p in PROCS], PARAMS)
+    for i, pname in enumerate(["sc5", "wb"]):
+        res = run_mc_events(job, plan, CFG, evs[i], PARAMS)
+        row = next(r for r in fleet_result.rows
+                   if (r["job"], r["policy"], r["process"]) ==
+                   ("J12", "burst-hads", pname))
+        np.testing.assert_allclose(row["cost"]["mean"],
+                                   float(res.cost.mean()), rtol=1e-6)
+        np.testing.assert_allclose(row["makespan"]["mean"],
+                                   float(res.makespan.mean()), rtol=1e-6)
+        assert row["mean_hibernations"] == \
+            pytest.approx(float(res.n_hibernations.mean()))
+
+
+def test_write_json(fleet_result, tmp_path):
+    path = str(tmp_path / "BENCH_fleet.json")
+    fleet_result.write_json(path)
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["generated_by"] == "repro.sim.fleet"
+    assert len(doc["rows"]) == len(fleet_result.rows)
+    for key in ("scen_per_s", "n_devices", "sharded", "plan_engine"):
+        assert key in doc["meta"]
+
+
+def test_event_tensor_column_mismatch_raises():
+    job = make_job("J12")
+    plan = build_primary_map(job, CFG, HADS, FAST)
+    ev = as_process("sc5").sample(
+        jax.random.PRNGKey(0), s=2, n_slots=10, v=3,
+        dt=30.0, deadline_s=job.deadline_s)
+    with pytest.raises(ValueError, match="columns"):
+        run_mc_events(job, plan, CFG, ev, PARAMS)
+
+
+SHARD_SCRIPT = r"""
+import numpy as np
+from repro.core.ils import ILSParams
+from repro.sim.fleet import evaluate_fleet
+from repro.sim.market import WeibullProcess
+from repro.sim.mc_engine import MCParams
+import jax
+assert len(jax.devices()) == 2, jax.devices()
+kw = dict(cfg=None, params=MCParams(n_scenarios=4, dt=30.0, seed=5),
+          ils_params=ILSParams(max_iteration=4, max_attempt=4, seed=3))
+procs = ["sc5", WeibullProcess(shape_h=0.7, scale_h=900.0, name="wb")]
+a = evaluate_fleet(["J8"], ["burst-hads"], procs, shard=True, **kw)
+b = evaluate_fleet(["J8"], ["burst-hads"], procs, shard=False, **kw)
+assert a.sharded and not b.sharded
+for ra, rb in zip(a.rows, b.rows):
+    np.testing.assert_allclose(ra["cost"]["mean"], rb["cost"]["mean"],
+                               rtol=1e-6)
+    np.testing.assert_allclose(ra["makespan"]["mean"],
+                               rb["makespan"]["mean"], rtol=1e-6)
+print("SHARD_OK", a.meta())
+"""
+
+
+def test_sharded_matches_unsharded_two_devices():
+    """Scenario-axis sharding is a pure placement change: identical
+    results on a forced 2-device host mesh (subprocess — device count is
+    frozen at jax import)."""
+    env = dict(os.environ,
+               XLA_FLAGS=(os.environ.get("XLA_FLAGS", "") +
+                          " --xla_force_host_platform_device_count=2"),
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH="src" + os.pathsep +
+                          os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", SHARD_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARD_OK" in out.stdout

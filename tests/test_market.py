@@ -1,0 +1,234 @@
+"""Market process library: statistical contracts + legacy Poisson parity.
+
+Three layers, mirroring DESIGN.md §2.4:
+  * generator statistics — per-process inter-arrival / count moments
+    within tolerance of closed form;
+  * the event-tensor contract itself — shapes, opt-out scores, concat,
+    trace round-trip exactness;
+  * the Poisson-equivalence guarantee — the tensor path reproduces the
+    pre-refactor inline-sampling engine per seed, pinned against
+    tests/data/mc_golden.json (captured from the PR 2 engine).
+"""
+import json
+import math
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.dynamic import BURST_HADS, HADS, build_primary_map
+from repro.core.ils import ILSParams
+from repro.core.types import CloudConfig
+from repro.sim import events as events_mod
+from repro.sim import market
+from repro.sim.events import SCENARIOS
+from repro.sim.market import (CorrelatedShockProcess, EventTensor,
+                              EventTensorError, MarkovModulatedProcess,
+                              PoissonProcess, TraceReplayProcess,
+                              WeibullProcess, as_process)
+from repro.sim.mc_engine import MCParams, run_mc
+from repro.sim.workloads import make_job
+
+D, DT = 2700.0, 10.0
+N = int(D / DT)
+KEY = jax.random.PRNGKey(0)
+GOLDEN = os.path.join(os.path.dirname(__file__), "data", "mc_golden.json")
+
+
+# ---------------------------------------------------------------------------
+# Generator statistics vs closed form
+# ---------------------------------------------------------------------------
+def test_poisson_count_moments():
+    """Bernoulli-thinned Poisson: E[count] = Var[count] ≈ k_h over [0, D],
+    and no events past the deadline."""
+    k_h, s = 4.0, 512
+    ev = PoissonProcess(k_h, 0.0).sample(KEY, s=s, n_slots=3 * N, v=8,
+                                         dt=DT, deadline_s=D)
+    counts = np.asarray(ev.hib_k.sum(axis=1), np.float64)
+    se = math.sqrt(k_h / s)
+    assert abs(counts.mean() - k_h) < 4 * se
+    assert abs(counts.var() - k_h) < 0.15 * k_h
+    assert np.all(np.asarray(ev.hib_k)[:, N:] == 0)   # t >= D is event-free
+    assert np.all(np.asarray(ev.res_k) == 0)          # k_r = 0
+
+
+def test_weibull_interarrival_moments():
+    """Renewal gaps match Weibull closed-form mean scale·Γ(1+1/k) and
+    variance scale²(Γ(1+2/k) − Γ²(1+1/k)) up to slot quantization and
+    deadline censoring."""
+    shape, scale, s = 1.5, 150.0, 256
+    proc = WeibullProcess(shape_h=shape, scale_h=scale)
+    ev = proc.sample(KEY, s=s, n_slots=N, v=8, dt=DT, deadline_s=D)
+    k = np.asarray(ev.hib_k)
+    gaps = []
+    centers = np.arange(N) * DT + DT / 2
+    for i in range(s):
+        t = np.repeat(centers, k[i])
+        if len(t) > 1:
+            gaps.append(np.diff(t))
+    gaps = np.concatenate(gaps)
+    mean_cf = proc.mean_interarrival("h")
+    var_cf = scale ** 2 * (math.gamma(1 + 2 / shape)
+                           - math.gamma(1 + 1 / shape) ** 2)
+    assert len(gaps) > 1000
+    assert abs(gaps.mean() - mean_cf) < 0.08 * mean_cf
+    assert abs(gaps.var() - var_cf) < 0.15 * var_cf
+
+
+def test_mmpp_rate_mix_and_overdispersion():
+    """Markov-modulated counts: mean ≈ π_c·k_calm + π_t·k_turb, and the
+    regime correlation makes counts overdispersed (var/mean > 1) —
+    the burstiness a homogeneous Poisson cannot produce."""
+    s = 512
+    proc = MarkovModulatedProcess(k_h_calm=1.0, k_h_turb=11.0, k_r=0.0,
+                                  mean_calm_s=1200.0, mean_turb_s=300.0)
+    ev = proc.sample(KEY, s=s, n_slots=N, v=8, dt=DT, deadline_s=D)
+    counts = np.asarray(ev.hib_k.sum(axis=1), np.float64)
+    pi_t = 300.0 / 1500.0
+    expect = (1 - pi_t) * 1.0 + pi_t * 11.0
+    assert abs(counts.mean() - expect) < 0.25 * expect
+    assert counts.var() / counts.mean() > 1.15
+
+
+def test_shock_severity_and_optout_contract():
+    """Mass shocks: E[victims] ≈ k_shock·severity·V, and the opt-out rule
+    holds — in every shock slot exactly hib_k columns carry non-negative
+    scores, so the engine can never widen the blast radius."""
+    s, v, k_shock, sev = 512, 20, 2.0, 0.5
+    ev = CorrelatedShockProcess(k_shock=k_shock, severity=sev).sample(
+        KEY, s=s, n_slots=N, v=v, dt=DT, deadline_s=D)
+    k = np.asarray(ev.hib_k)
+    u = np.asarray(ev.hib_u)
+    victims = k.sum(axis=1).astype(np.float64)
+    expect = k_shock * sev * v
+    assert abs(victims.mean() - expect) < 0.15 * expect
+    pos = (u >= 0.0).sum(axis=2)
+    assert np.all((pos == k) | (k == 0))
+
+
+# ---------------------------------------------------------------------------
+# Tensor contract + trace replay
+# ---------------------------------------------------------------------------
+def test_tensor_validation_and_concat():
+    ev = PoissonProcess(1.0, 1.0).sample(KEY, s=4, n_slots=10, v=3,
+                                         dt=30.0, deadline_s=300.0)
+    ev.validate()
+    assert (ev.n_scenarios, ev.n_slots, ev.n_vms) == (4, 10, 3)
+    both = EventTensor.concat([ev, ev])
+    assert both.n_scenarios == 8 and both.n_slots == 10
+    np.testing.assert_array_equal(np.asarray(both.hib_k[:4]),
+                                  np.asarray(ev.hib_k))
+    bad = EventTensor(ev.hib_k, ev.hib_u[:, :, :2], ev.res_k, ev.res_u)
+    with pytest.raises(EventTensorError):
+        bad.validate()
+    other = PoissonProcess(1.0, 0.0).sample(KEY, s=4, n_slots=9, v=3,
+                                            dt=30.0, deadline_s=300.0)
+    with pytest.raises(EventTensorError):
+        EventTensor.concat([ev, other])
+
+
+def test_as_process_coercion():
+    p = as_process("sc5")
+    assert isinstance(p, PoissonProcess) and p.k_h == 3.0 and p.name == "sc5"
+    assert as_process(SCENARIOS["sc1"]).k_h == 1.0
+    assert as_process(p) is p
+    with pytest.raises(KeyError):
+        as_process("sc99")
+    with pytest.raises(TypeError):
+        as_process(3.14)
+
+
+def test_trace_roundtrip_exact(tmp_path):
+    """CSV round-trip preserves every event exactly — times included
+    (0.1 + 0.2 style floats must survive repr/parse unchanged)."""
+    evs = [(0.1 + 0.2, "hibernate", -1), (500.0, "resume", 2),
+           (1234.567891234, "hibernate", 0), (2699.999999, "resume", -1)]
+    proc = TraceReplayProcess.from_events(evs, name="empirical")
+    path = str(tmp_path / "trace.csv")
+    proc.to_csv(path)
+    back = TraceReplayProcess.from_csv(path, name="empirical")
+    assert back == proc
+    assert back.times == proc.times        # bitwise-equal floats
+
+
+def test_trace_tensor_targets_named_column():
+    proc = TraceReplayProcess.from_events(
+        [(95.0, "hibernate", 1), (200.0, "resume", -1)])
+    ev = proc.sample(KEY, s=3, n_slots=10, v=4, dt=30.0, deadline_s=300.0)
+    k = np.asarray(ev.hib_k)
+    u = np.asarray(ev.hib_u)
+    assert np.all(k[:, 3] == 1) and k.sum() == 3    # slot 95//30 = 3 only
+    # named column ranks first, every other column opts out
+    assert np.all(u[:, 3, 1] > 0) and np.all(np.delete(u[:, 3], 1, 1) < 0)
+    assert np.all(np.asarray(ev.res_k)[:, 6] == 1)
+    assert np.all(np.asarray(ev.res_u)[:, 6] >= 0)  # anonymous: all eligible
+
+
+def test_trace_mixed_slot_keeps_explicit_skip_semantics():
+    """An explicit and an anonymous event landing in the same slot are
+    separated (anonymous bumped to the next slot): if the named column is
+    ineligible at fire time its event is *skipped*, never silently
+    replaced by a second random victim filling the shared k."""
+    proc = TraceReplayProcess.from_events(
+        [(10.0, "hibernate", 2), (20.0, "hibernate", -1)])
+    ev = proc.sample(KEY, s=2, n_slots=8, v=4, dt=30.0, deadline_s=240.0)
+    k = np.asarray(ev.hib_k)
+    u = np.asarray(ev.hib_u)
+    # slot 0: explicit event alone — only column 2 is a candidate
+    assert np.all(k[:, 0] == 1)
+    assert np.all(u[:, 0, 2] > 0) and np.all(np.delete(u[:, 0], 2, 1) < 0)
+    # slot 1: the bumped anonymous event — every column is a candidate
+    assert np.all(k[:, 1] == 1) and np.all(u[:, 1] >= 0)
+    assert k.sum() == 2 * 2
+
+
+def test_events_module_delegates_to_market():
+    """events.sample_market_events is a delegate of market's single source
+    of truth — identical draws for identical rng state."""
+    sc = SCENARIOS["sc5"]
+    a = events_mod.sample_market_events(sc, D, np.random.default_rng(7))
+    b = market.sample_market_events(sc, D, np.random.default_rng(7))
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Poisson equivalence: tensor path == pre-refactor inline engine, per seed
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def golden_plans(golden):
+    cfg = CloudConfig()
+    ils = ILSParams(**golden["ils"])
+    job = make_job(golden["job"])
+    return job, cfg, {
+        "burst-hads": build_primary_map(job, cfg, BURST_HADS, ils),
+        "hads": build_primary_map(job, cfg, HADS, ils)}
+
+
+def test_poisson_tensor_matches_legacy_engine_per_seed(golden, golden_plans):
+    """The acceptance pin: `run_mc` through the pregenerated Poisson
+    tensor reproduces the pre-refactor inline-sampling engine's cost and
+    makespan distributions per seed (S=64 each; hibernation/resume counts
+    must match *exactly* — identical victims in every scenario).  The
+    golden arrays were rounded when captured, hence the small atol."""
+    job, cfg, plans = golden_plans
+    for case in golden["cases"]:
+        res = run_mc(job, plans[case["policy"]], cfg,
+                     SCENARIOS[case["scenario"]],
+                     MCParams(n_scenarios=case["s"], dt=case["dt"],
+                              seed=case["seed"]))
+        np.testing.assert_array_equal(res.n_hibernations,
+                                      case["n_hibernations"],
+                                      err_msg=case["scenario"])
+        np.testing.assert_array_equal(res.n_resumes, case["n_resumes"])
+        np.testing.assert_array_equal(res.unfinished, case["unfinished"])
+        np.testing.assert_allclose(res.cost, case["cost"],
+                                   rtol=1e-5, atol=2e-6)
+        np.testing.assert_allclose(res.makespan, case["makespan"],
+                                   rtol=1e-5, atol=2e-3)
