@@ -91,11 +91,13 @@ def run(job_names: tuple[str, ...] = ("J60", "J80"),
                     "met_frac": round(float(r.deadline_met.mean()), 3),
                     "hib_mean": round(float(r.n_hibernations.mean()), 2),
                     "res_mean": round(float(r.n_resumes.mean()), 2),
+                    "slots_skipped_frac":
+                        round(r.slots_skipped_frac, 3),
                 })
     total = n_cells * s
     rows.append({
         "table": "fleet_throughput", "grid_cells": n_cells, "s": s,
-        "scenarios_total": total,
+        "scenarios_total": total, "stepping": params.stepping,
         "loop_scen_per_s": round(total / max(loop_wall, 1e-9), 1),
         "fleet_scen_per_s": round(total / max(fleet_wall, 1e-9), 1),
         "speedup": round(loop_wall / max(fleet_wall, 1e-9), 2),

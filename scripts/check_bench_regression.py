@@ -1,0 +1,111 @@
+"""Bench-regression gate for the dynamic engine (CI smoke step).
+
+  PYTHONPATH=src python scripts/check_bench_regression.py [--threshold 0.3]
+
+Compares the freshly written root-level ``BENCH_dynamic.json`` (produced
+by the preceding ``python -m benchmarks.run --smoke`` step) against the
+*committed* baseline (``git show HEAD:BENCH_dynamic.json``, so the smoke
+run overwriting the worktree copy cannot mask a regression).  Rows are
+matched on (job, policy, process, s, dt, stepping); carried-over rows
+(``"carried": true`` — copied from the previous artifact rather than
+re-measured) are excluded.
+
+Absolute scenarios/s depends on the runner's hardware, and same-machine
+run-to-run variance at smoke sizes already exceeds 30%, so the gate
+checks the two machine-independent signals instead:
+
+* ``steps`` — while-loop iterations, deterministic given the bench grid
+  and seeds: an *increase* beyond the threshold means the event-horizon
+  jump lattice got weaker (the failure mode this gate exists for);
+* ``vs_slot`` — adaptive/slot throughput ratio, measured over identical
+  tensors in the same process, so hardware speed cancels: a *drop*
+  beyond the threshold means per-iteration overhead regressed.
+
+``scen_per_s`` deltas are printed for information only.  Skips
+gracefully (exit 0, with a notice) when no baseline is committed yet,
+the fresh artifact is missing, or no keys overlap — a new bench grid
+shouldn't brick CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACT = "BENCH_dynamic.json"
+KEY = ("job", "policy", "process", "s", "dt", "stepping")
+
+
+def _rows_by_key(doc: dict) -> dict:
+    return {tuple(r.get(k) for k in KEY): r for r in doc.get("rows", [])}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float,
+                    default=float(os.environ.get("BENCH_REGRESSION_PCT",
+                                                 0.3)),
+                    help="max fractional steps increase / vs_slot drop "
+                         "(default 0.3)")
+    args = ap.parse_args()
+
+    fresh_path = os.path.join(REPO, ARTIFACT)
+    if not os.path.exists(fresh_path):
+        print(f"# bench gate: no fresh {ARTIFACT} — skipping")
+        return 0
+    with open(fresh_path) as f:
+        fresh = _rows_by_key(json.load(f))
+
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"HEAD:{ARTIFACT}"], cwd=REPO, check=True,
+            capture_output=True, text=True).stdout
+        base = _rows_by_key(json.loads(blob))
+    except (subprocess.CalledProcessError, FileNotFoundError, ValueError):
+        print(f"# bench gate: no committed {ARTIFACT} baseline — skipping")
+        return 0
+
+    common = sorted((k for k in set(fresh) & set(base)
+                     if not fresh[k].get("carried")), key=str)
+    if not common:
+        print("# bench gate: no re-measured overlapping keys — skipping")
+        return 0
+
+    failures = []
+    for k in common:
+        b, f_ = base[k], fresh[k]
+        label = dict(zip(KEY, k))
+        checks = []
+        if b.get("steps") and f_.get("steps"):
+            grow = f_["steps"] / b["steps"] - 1.0
+            checks.append(("steps", f"{b['steps']} -> {f_['steps']}",
+                           grow > args.threshold))
+        if b.get("vs_slot") and f_.get("vs_slot"):
+            drop = 1.0 - f_["vs_slot"] / b["vs_slot"]
+            checks.append(("vs_slot", f"{b['vs_slot']} -> {f_['vs_slot']}",
+                           drop > args.threshold))
+        bad = [c for c in checks if c[2]]
+        rate = ""
+        if b.get("scen_per_s") and f_.get("scen_per_s"):
+            rate = (f" [scen/s {b['scen_per_s']:.0f} -> "
+                    f"{f_['scen_per_s']:.0f}, informational]")
+        detail = ", ".join(f"{n} {d}" for n, d, _ in checks)
+        print(f"# {label}: {detail}{rate} "
+              f"{'REGRESSION' if bad else 'ok'}")
+        if bad:
+            failures.append((k, bad))
+    if failures:
+        print(f"\n# BENCH REGRESSION: {len(failures)} row(s) exceeded the "
+              f"{args.threshold:.0%} threshold on steps/vs_slot vs the "
+              f"committed baseline", file=sys.stderr)
+        return 1
+    print(f"# bench gate: {len(common)} re-measured row(s) within "
+          f"{args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,7 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .mc_step import mc_vm_reduce
+from .mc_step import mc_span_reduce, mc_vm_reduce
 from .sched_fitness import delta_population_fitness, population_reduce
 
 
@@ -74,3 +74,18 @@ def mc_vm_stats(assign, rem, *, v: int, interpret: bool = True):
     cols = jnp.where(pending, assign, -1)
     w = jnp.where(pending, rem, 0.0).astype(jnp.float32)
     return mc_vm_reduce(cols, w, v, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("v", "interpret"))
+def mc_span_advance(assign, rem, drem, m, *, v: int, interpret: bool = True):
+    """Event-horizon span advance fused with the VM reductions
+    (DESIGN.md §2.5): jump ``m`` uniform slots in closed form
+    (``rem_new = max(rem − m·drem, 0)``, exact — the engine only requests
+    spans that are completion-free) and reduce the advanced state to
+    per-(scenario, VM) load / unfinished count / max remaining in the
+    same streamed pass.  Returns (rem_new [S, B], load, cnt, maxw each
+    f32 [S, v])."""
+    pending = rem > 0.0
+    cols = jnp.where(pending, assign, -1)
+    return mc_span_reduce(cols, rem, jnp.where(pending, drem, 0.0), m, v,
+                          interpret=interpret)

@@ -75,6 +75,25 @@ def mc_vm_stats_ref(cols: jax.Array, w: jax.Array, v: int
     return load, cnt, maxw
 
 
+def mc_span_advance_ref(assign: jax.Array, rem: jax.Array, drem: jax.Array,
+                        m, v: int):
+    """Oracle for ``ops.mc_span_advance`` / ``mc_step.mc_span_reduce``:
+    closed-form jump over ``m`` uniform (completion-free) slots followed
+    by the three VM reductions of the advanced remaining-work vector.
+
+    assign int32 [S, B]; rem/drem f32 [S, B]; m f32 [S] per-scenario
+    slot counts.
+    Returns (rem_new [S, B], load, cnt, maxw each f32 [S, v])."""
+    pending = rem > 0.0
+    m = jnp.asarray(m, jnp.float32).reshape(-1, 1)     # [S, 1] span slots
+    rem_new = jnp.where(
+        pending, jnp.maximum(rem - m * drem, 0.0), rem)
+    load, cnt, maxw = mc_vm_stats_ref(
+        jnp.where(rem_new > 0.0, assign, -1),
+        jnp.where(rem_new > 0.0, rem_new, 0.0), v)
+    return rem_new, load, cnt, maxw
+
+
 def delta_fitness_ref(alloc, t_idx, dest, e, rm, vm_cores, vm_mem, vm_price,
                       vm_is_spot, *, dspot, deadline, alpha, cost_scale,
                       boot_s):

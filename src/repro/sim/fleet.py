@@ -46,6 +46,9 @@ class FleetResult:
     n_devices: int
     sharded: bool
     plan_engine: str
+    stepping: str = "adaptive"
+    slots_total: int = 0     # scenario-slots covered across the grid
+    slots_visited: int = 0   # scenario-slots full-stepped (rest jumped)
 
     @property
     def total_scenarios(self) -> int:
@@ -55,6 +58,13 @@ class FleetResult:
     def scen_per_s(self) -> float:
         return self.total_scenarios / max(self.mc_wall_s, 1e-9)
 
+    @property
+    def slots_skipped_frac(self) -> float:
+        """Fraction of scenario-slots the event-horizon engine advanced
+        in closed form instead of full-stepping (DESIGN.md §2.5); 0 for
+        ``stepping="slot"``."""
+        return 1.0 - self.slots_visited / max(1, self.slots_total)
+
     def meta(self) -> dict:
         return {"wall_s": round(self.wall_s, 3),
                 "mc_wall_s": round(self.mc_wall_s, 3),
@@ -62,7 +72,11 @@ class FleetResult:
                 "total_scenarios": self.total_scenarios,
                 "scen_per_s": round(self.scen_per_s, 1),
                 "n_devices": self.n_devices, "sharded": self.sharded,
-                "plan_engine": self.plan_engine}
+                "plan_engine": self.plan_engine,
+                "stepping": self.stepping,
+                "slots_total": self.slots_total,
+                "slots_visited": self.slots_visited,
+                "slots_skipped_frac": round(self.slots_skipped_frac, 3)}
 
     def write_json(self, path: str) -> None:
         with open(path, "w") as f:
@@ -88,7 +102,9 @@ def shard_events(ev: EventTensor, sharding) -> EventTensor:
     return EventTensor(jax.device_put(ev.hib_k, sharding),
                        jax.device_put(ev.hib_u, s3),
                        jax.device_put(ev.res_k, sharding),
-                       jax.device_put(ev.res_u, s3))
+                       jax.device_put(ev.res_u, s3),
+                       None if ev.nxt is None
+                       else jax.device_put(ev.nxt, sharding))
 
 
 def sample_grid_events(job: Job, plan, processes, params: MCParams
@@ -135,6 +151,7 @@ def evaluate_fleet(jobs, policies, processes,
     rows: list[dict] = []
     t_start = time.perf_counter()
     plan_wall = mc_wall = 0.0
+    slots_total = slots_visited = 0
     for job in jobs:
         for policy in policies:
             t0 = time.perf_counter()
@@ -147,6 +164,8 @@ def evaluate_fleet(jobs, policies, processes,
             res = run_mc_events(job, plan, cfg, ev_all, params,
                                 label="fleet")
             mc_wall += time.perf_counter() - t0
+            slots_total += res.slots_total
+            slots_visited += res.slots_visited
             for i, proc in enumerate(processes):
                 sl = slice(i * s, (i + 1) * s)
                 rows.append({
@@ -162,9 +181,16 @@ def evaluate_fleet(jobs, policies, processes,
                     "mean_hibernations":
                         float(np.mean(res.n_hibernations[sl])),
                     "mean_resumes": float(np.mean(res.n_resumes[sl])),
+                    # per-cell share of the event-horizon win: fraction
+                    # of this slice's scenario-slots jumped in closed form
+                    "slots_skipped_frac": round(
+                        1.0 - float(res.visited[sl].sum())
+                        / max(1, int(res.exit_slots[sl].sum())), 3),
                 })
     return FleetResult(rows=rows, wall_s=time.perf_counter() - t_start,
                        mc_wall_s=mc_wall, plan_wall_s=plan_wall,
                        n_devices=len(jax.devices()),
                        sharded=sharding is not None,
-                       plan_engine=plan_engine)
+                       plan_engine=plan_engine, stepping=params.stepping,
+                       slots_total=slots_total,
+                       slots_visited=slots_visited)

@@ -53,12 +53,20 @@ class EventTensorError(ValueError):
 
 @dataclasses.dataclass(frozen=True)
 class EventTensor:
-    """Pregenerated market events for S scenarios × N slots × V columns."""
+    """Pregenerated market events for S scenarios × N slots × V columns.
+
+    ``nxt`` is the *next-event index*: ``nxt[s, i]`` is the first slot
+    ``j >= i`` with a nonzero event request in scenario ``s`` (``n_slots``
+    when none remain).  It is built once at tensor-generation time
+    (``MarketProcess.sample`` → ``with_index``) and is what lets the
+    event-horizon engine (``sim.mc_engine``, DESIGN.md §2.5) jump over
+    empty slots in O(1) instead of stepping them one by one."""
 
     hib_k: jax.Array   # int32 [S, N]  victims requested per slot
     hib_u: jax.Array   # f32 [S, N, V] victim priority scores
     res_k: jax.Array   # int32 [S, N]  beneficiaries requested per slot
     res_u: jax.Array   # f32 [S, N, V] beneficiary priority scores
+    nxt: jax.Array | None = None   # int32 [S, N] next nonzero event slot
 
     @property
     def n_scenarios(self) -> int:
@@ -72,16 +80,26 @@ class EventTensor:
     def n_vms(self) -> int:
         return self.hib_u.shape[2]
 
+    def with_index(self) -> "EventTensor":
+        """Return the same tensor with ``nxt`` populated (no-op when it
+        already is) — one reverse-cummin pass over the request counts."""
+        if self.nxt is not None:
+            return self
+        return dataclasses.replace(
+            self, nxt=_next_event_index(self.hib_k, self.res_k))
+
     def validate(self) -> "EventTensor":
         s, n, v = self.n_scenarios, self.n_slots, self.n_vms
         shapes = {"hib_k": (s, n), "hib_u": (s, n, v),
                   "res_k": (s, n), "res_u": (s, n, v)}
+        if self.nxt is not None:
+            shapes["nxt"] = (s, n)
         for name, want in shapes.items():
             a = getattr(self, name)
             if tuple(a.shape) != want:
                 raise EventTensorError(
                     f"{name} has shape {tuple(a.shape)}, want {want}")
-            want_dt = jnp.int32 if name.endswith("_k") else jnp.float32
+            want_dt = jnp.float32 if name.endswith("_u") else jnp.int32
             if a.dtype != want_dt:
                 raise EventTensorError(
                     f"{name} has dtype {a.dtype}, want {want_dt}")
@@ -90,7 +108,8 @@ class EventTensor:
     @staticmethod
     def concat(tensors: "list[EventTensor]") -> "EventTensor":
         """Stack along the scenario axis — how the fleet pipeline turns a
-        process grid into one engine call (``sim.fleet``)."""
+        process grid into one engine call (``sim.fleet``).  The next-event
+        index concatenates too (slot indices are per-scenario)."""
         if not tensors:
             raise EventTensorError("concat of empty tensor list")
         n, v = tensors[0].n_slots, tensors[0].n_vms
@@ -99,17 +118,32 @@ class EventTensor:
                 raise EventTensorError(
                     f"cannot concat [*,{t.n_slots},{t.n_vms}] with "
                     f"[*,{n},{v}] — same (job, plan) required")
+        nxt = None
+        if all(t.nxt is not None for t in tensors):
+            nxt = jnp.concatenate([t.nxt for t in tensors], axis=0)
         return EventTensor(
             jnp.concatenate([t.hib_k for t in tensors], axis=0),
             jnp.concatenate([t.hib_u for t in tensors], axis=0),
             jnp.concatenate([t.res_k for t in tensors], axis=0),
-            jnp.concatenate([t.res_u for t in tensors], axis=0))
+            jnp.concatenate([t.res_u for t in tensors], axis=0),
+            nxt)
 
 
 jax.tree_util.register_pytree_node(
     EventTensor,
-    lambda t: ((t.hib_k, t.hib_u, t.res_k, t.res_u), None),
+    lambda t: ((t.hib_k, t.hib_u, t.res_k, t.res_u, t.nxt), None),
     lambda _, c: EventTensor(*c))
+
+
+@jax.jit
+def _next_event_index(hib_k: jax.Array, res_k: jax.Array) -> jax.Array:
+    """int32 [S, N] pointer to the next slot >= i with any nonzero event
+    request (hibernation or resume); ``n_slots`` when none remain.  One
+    reverse cumulative-min pass, built once per tensor."""
+    s, n = hib_k.shape
+    has = (hib_k > 0) | (res_k > 0)
+    idx = jnp.where(has, jnp.arange(n, dtype=jnp.int32)[None], jnp.int32(n))
+    return jax.lax.cummin(idx, axis=1, reverse=True)
 
 
 class MarketProcess:
@@ -117,14 +151,23 @@ class MarketProcess:
 
     Subclasses are frozen dataclasses (hashable, usable as dict keys) with
     a ``name`` used in results tables.  To add a new process, implement
-    ``sample`` with any stochastic structure — the engine only sees the
-    tensor (DESIGN.md §2.4 walks through an example).
+    ``_sample`` with any stochastic structure — the engine only sees the
+    tensor (DESIGN.md §2.4 walks through an example).  ``sample`` is a
+    template method: it draws the tensor and attaches the next-event
+    index (``EventTensor.nxt``) so every generated tensor arrives
+    jump-ready for the event-horizon engine (DESIGN.md §2.5).
     """
 
     name: str = "market"
 
     def sample(self, key, *, s: int, n_slots: int, v: int, dt: float,
                deadline_s: float) -> EventTensor:
+        ev = self._sample(key, s=s, n_slots=n_slots, v=v, dt=dt,
+                          deadline_s=deadline_s)
+        return ev.with_index()
+
+    def _sample(self, key, *, s: int, n_slots: int, v: int, dt: float,
+                deadline_s: float) -> EventTensor:
         raise NotImplementedError
 
 
@@ -189,7 +232,7 @@ class PoissonProcess(MarketProcess):
     def from_scenario(cls, sc: Scenario) -> "PoissonProcess":
         return cls(k_h=sc.k_h, k_r=sc.k_r, name=sc.name)
 
-    def sample(self, key, *, s, n_slots, v, dt, deadline_s) -> EventTensor:
+    def _sample(self, key, *, s, n_slots, v, dt, deadline_s) -> EventTensor:
         ph = jnp.float32(min(1.0, self.k_h * dt / deadline_s))
         pr = jnp.float32(min(1.0, self.k_r * dt / deadline_s))
         return _poisson_tensor(key, s, n_slots, v, ph, pr,
@@ -231,7 +274,7 @@ class WeibullProcess(MarketProcess):
         gaps = scale * (-jnp.log(u)) ** (1.0 / shape)
         return _slot_counts(jnp.cumsum(gaps, axis=1), n, dt, deadline_s)
 
-    def sample(self, key, *, s, n_slots, v, dt, deadline_s) -> EventTensor:
+    def _sample(self, key, *, s, n_slots, v, dt, deadline_s) -> EventTensor:
         k1, k2, k3, k4 = jax.random.split(key, 4)
         return EventTensor(
             self._arrival_counts(k1, s, n_slots, dt, deadline_s,
@@ -264,7 +307,7 @@ class MarkovModulatedProcess(MarketProcess):
     mean_turb_s: float = 300.0
     name: str = "mmpp"
 
-    def sample(self, key, *, s, n_slots, v, dt, deadline_s) -> EventTensor:
+    def _sample(self, key, *, s, n_slots, v, dt, deadline_s) -> EventTensor:
         p_ct = min(1.0, dt / self.mean_calm_s)
         p_tc = min(1.0, dt / self.mean_turb_s)
         ph_c = min(1.0, self.k_h_calm * dt / deadline_s)
@@ -323,7 +366,7 @@ class CorrelatedShockProcess(MarketProcess):
     recovery_s: float = 600.0
     name: str = "shock"
 
-    def sample(self, key, *, s, n_slots, v, dt, deadline_s) -> EventTensor:
+    def _sample(self, key, *, s, n_slots, v, dt, deadline_s) -> EventTensor:
         p_shock = min(1.0, self.k_shock * dt / deadline_s)
         ph_base = min(1.0, self.k_h_base * dt / deadline_s)
         pr_base = min(1.0, self.k_r_base * dt / deadline_s)
@@ -428,7 +471,7 @@ class TraceReplayProcess(MarketProcess):
             for t, k, vm in zip(self.times, self.kinds, self.vms):
                 w.writerow([repr(t), k, vm])
 
-    def sample(self, key, *, s, n_slots, v, dt, deadline_s) -> EventTensor:
+    def _sample(self, key, *, s, n_slots, v, dt, deadline_s) -> EventTensor:
         counts = np.zeros((2, n_slots), np.int32)
         expl = np.full((2, n_slots, v), False)       # explicit-vm targets
         anon = np.zeros((2, n_slots), np.int64)      # anonymous event count

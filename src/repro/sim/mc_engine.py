@@ -2,9 +2,9 @@
 
 The discrete-event simulator (``sim.simulator``) replays ONE Poisson
 interruption trace per run; Table V conclusions drawn from it are one-trace
-anecdotes.  This module advances S independent hibernation scenarios in
-lockstep on device: time is discretized into fixed slots of ``dt`` seconds
-and a jit-compiled ``lax.while_loop`` steps per-slot state
+anecdotes.  This module advances S independent hibernation scenarios on
+device: time is discretized into slots of ``dt`` seconds and a
+jit-compiled ``lax.while_loop`` steps the state
 
   * ``[S, V]`` VM columns — lifecycle (not-launched / active / hibernated /
     terminated), boot clocks, billing accumulators that *pause during
@@ -50,6 +50,24 @@ generates the tensor from a process (or legacy Table V scenario) and
 delegates to ``run_mc_events``, the raw-tensor entry point the fleet
 pipeline (``sim.fleet``) batches over.  Slot-discretization error bounds
 and the DES parity contract are documented in DESIGN.md §2.3.
+
+The paper's dynamic module only *acts* at events — hibernations/resumes,
+AC boundaries, task and boot completions — yet spot interruption
+processes are bursty and sparse, so most slots are pure
+progress/billing/credit updates with closed-form dynamics.  The default
+``stepping="adaptive"`` hot loop therefore does **event-horizon
+stepping** (DESIGN.md §2.5): per scenario (the slot clock ``i`` is
+``[S]``) each iteration computes the next *interesting* slot — min over
+the tensor's next-event pointer (``EventTensor.nxt``), the next AC
+boundary, the first task completion, boot edge, burstable-credit
+boundary, and the deferred-HADS fire instant — jumps straight to it,
+advancing task progress, billing accumulators and the piecewise-linear
+credit buckets in closed form across the span (the fused
+``mc_span_advance`` kernel on accelerators), and full-steps only the
+interesting slot.  ``stepping="slot"`` keeps the legacy fixed-slot walk
+for parity testing; on dt-aligned tensors the two engines produce
+identical event counts and cost/makespan to rounding
+(``tests/test_stepping.py``).
 """
 from __future__ import annotations
 
@@ -67,7 +85,7 @@ from repro.core.fitness import pack_solution
 from repro.core.ils import ILSParams
 from repro.core.runtime import CHECKPOINT_WRITE_S
 from repro.core.types import CloudConfig, Job, Market
-from repro.kernels.sched_fitness.ops import mc_vm_stats
+from repro.kernels.sched_fitness.ops import mc_span_advance, mc_vm_stats
 from .events import SC_NONE, Scenario
 from .market import EventTensor, MarketProcess, as_process
 
@@ -87,8 +105,17 @@ def dist_stats(x: np.ndarray) -> dict:
 
 @dataclasses.dataclass(frozen=True)
 class MCParams:
-    """Engine knobs.  ``dt`` must divide both the boot overhead and the
-    Allocation Cycle so AC boundaries land on slot edges."""
+    """Engine knobs.
+
+    ``stepping`` selects the hot loop: ``"adaptive"`` (default) is the
+    event-horizon engine — each iteration jumps straight to the next
+    interesting slot (event, AC boundary, task/boot completion, credit
+    boundary) and advances the skipped span in closed form (DESIGN.md
+    §2.5); ``"slot"`` is the legacy fixed-``dt`` walk kept for parity
+    testing.  Under ``"slot"`` ``dt`` must divide both the boot overhead
+    and the Allocation Cycle so AC boundaries land on slot edges; the
+    adaptive engine lifts that restriction (boundaries are jump targets,
+    not grid points)."""
 
     n_scenarios: int = 256
     dt: float = 30.0
@@ -98,6 +125,7 @@ class MCParams:
     hads_margin_s: float = 30.0   # deferred-migration safety margin
     steal_rounds: int = 2         # Alg. 5 attempts per AC boundary
     mig_rounds: int = 8           # Alg. 4 argmin rounds (bag fan-out width)
+    stepping: str = "adaptive"    # "adaptive" (event-horizon) | "slot"
     use_kernel: bool | None = None  # None: Pallas on accelerators, jnp on CPU
     interpret: bool | None = None   # None: interpret only on CPU
 
@@ -118,10 +146,30 @@ class MCResult:
     n_resumes: np.ndarray
     billed_s: np.ndarray      # f32 [S, V] billed seconds per column
     vm_uids: list[int]        # column -> VMInstance.uid
+    stepping: str = "slot"
+    n_steps: int = 0          # while-loop iterations
+    exit_slots: np.ndarray | None = None  # int [S] per-scenario exit slot
+    visited: np.ndarray | None = None     # bool [S, n_slots] stepped mask
 
     @property
     def n(self) -> int:
         return len(self.cost)
+
+    @property
+    def slots_total(self) -> int:
+        """Scenario-slots covered (sum of per-scenario exit slots)."""
+        return 0 if self.exit_slots is None else int(self.exit_slots.sum())
+
+    @property
+    def slots_visited(self) -> int:
+        """Scenario-slots actually full-stepped (the rest were jumped
+        over in closed form; equal to ``slots_total`` for the fixed-slot
+        engine, which visits every slot)."""
+        return 0 if self.visited is None else int(self.visited.sum())
+
+    @property
+    def slots_skipped_frac(self) -> float:
+        return 1.0 - self.slots_visited / max(1, self.slots_total)
 
     def summary(self) -> dict:
         return {"policy": self.policy, "scenario": self.scenario,
@@ -229,6 +277,7 @@ def _scalars(job: Job, cfg: CloudConfig, params: MCParams,
         "bperiod": jnp.float32(cfg.burst_period_s),
         "margin": jnp.float32(params.hads_margin_s),
         "od_speed": jnp.float32(od_speed),
+        "ac_seconds": jnp.float32(cfg.allocation_cycle_s),
         "boot_slots": jnp.int32(round(cfg.boot_overhead_s / dt)),
         "ac_slots": jnp.int32(round(cfg.allocation_cycle_s / dt)),
         "max_slots": jnp.int32(n_slots),
@@ -258,7 +307,7 @@ def _dest_column(load, vstate, boot, credits, aff_load, aff_mem, arr, sc, t,
     ok_new = (vstate == NOT_LAUNCHED) & odm[None] & fits
 
     drain = load / (cores * speed)[None]
-    boot_left = jnp.clip(boot - t, 0.0, sc["omega"])
+    boot_left = jnp.clip(boot - t[:, None], 0.0, sc["omega"])
     score = jnp.where(
         ok_active,
         drain + boot_left - jnp.where(burst[None], 1.0, 0.0),
@@ -276,10 +325,12 @@ def _checkpoint_floor(rem, total, cp, mask):
 
 
 def _apply_launch(vstate, boot, dest, do, t, sc, iota_v):
-    """Launch ``dest`` columns that were NOT_LAUNCHED (dynamic on-demand)."""
+    """Launch ``dest`` columns that were NOT_LAUNCHED (dynamic on-demand).
+    ``t`` is per-scenario [S] — scenarios step their own clocks under
+    event-horizon stepping (DESIGN.md §2.5)."""
     hit = do[:, None] & (iota_v == dest[:, None]) & (vstate == NOT_LAUNCHED)
     vstate = jnp.where(hit, VM_ACTIVE, vstate)
-    boot = jnp.where(hit, t + sc["omega"], boot)
+    boot = jnp.where(hit, t[:, None] + sc["omega"], boot)
     return vstate, boot
 
 
@@ -335,12 +386,10 @@ def _select(u, elig, k):
 # ---------------------------------------------------------------------------
 # Jitted engine
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=(
-    "s", "policy", "steal_rounds", "mig_rounds", "mem_safe", "use_kernel",
-    "interpret"))
-def _mc_run(arr: dict, sc: dict, ev: EventTensor, *, s: int,
-            policy: PolicyConfig, steal_rounds: int, mig_rounds: int,
-            mem_safe: bool, use_kernel: bool, interpret: bool) -> dict:
+def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
+                 policy: PolicyConfig, steal_rounds: int, mig_rounds: int,
+                 mem_safe: bool, use_kernel: bool, interpret: bool,
+                 stepping: str, ac_aligned: bool) -> dict:
     total, mem_t = arr["total"], arr["mem_t"]
     price, cores, speed = arr["price"], arr["cores"], arr["speed"]
     bfrac, memv = arr["bfrac"], arr["memv"]
@@ -350,10 +399,13 @@ def _mc_run(arr: dict, sc: dict, ev: EventTensor, *, s: int,
     dt = sc["dt"]
     iota_v = jnp.arange(v)[None]
     rows = jnp.arange(s)
+    bi = arr["burst_idx"]
+    adaptive = stepping == "adaptive"
+    n_slots = ev.hib_k.shape[1]
 
     launched0 = arr["launched0"]
     carry = (
-        jnp.int32(0),                                             # slot i
+        jnp.zeros(s, jnp.int32),                                  # slot i[S]
         jnp.tile(jnp.where(launched0, VM_ACTIVE,
                            NOT_LAUNCHED).astype(jnp.int32)[None], (s, 1)),
         jnp.tile(jnp.where(launched0, sc["omega"], BIG)[None], (s, 1)),
@@ -366,88 +418,248 @@ def _mc_run(arr: dict, sc: dict, ev: EventTensor, *, s: int,
         jnp.full((s, b), BIG, jnp.float32),                       # done_at
         jnp.zeros(s, jnp.int32),                                  # n_hib
         jnp.zeros(s, jnp.int32),                                  # n_res
+        jnp.int32(0),                                             # n_steps
+        jnp.zeros((s, n_slots), bool),                            # visited
     )
 
     def cond(c):
-        return (c[0] < sc["max_slots"]) & jnp.any(c[5] > 0.0)
+        # a scenario is live while it has pending work inside the horizon;
+        # the loop runs until every scenario has exited its own clock
+        return jnp.any((c[0] < sc["max_slots"]) &
+                       jnp.any(c[5] > 0.0, axis=1))
 
     def step(c):
         (i, vstate, boot, billed, credits, rem, assign, mode, done_at,
-         nhib, nres) = c
-        t = i.astype(jnp.float32) * dt     # slot covers [t, t + dt)
-        t1 = t + dt
-        # this slot's pregenerated market events (DESIGN.md §2.4)
-        hib_k = jax.lax.dynamic_index_in_dim(ev.hib_k, i, 1, keepdims=False)
-        hib_u = jax.lax.dynamic_index_in_dim(ev.hib_u, i, 1, keepdims=False)
-        res_k = jax.lax.dynamic_index_in_dim(ev.res_k, i, 1, keepdims=False)
-        res_u = jax.lax.dynamic_index_in_dim(ev.res_u, i, 1, keepdims=False)
+         nhib, nres, nsteps, visited) = c
 
         pending = rem > 0.0
-        gate = jnp.any(pending, axis=1)                       # [S] live
+        # a row is live while it has pending work *inside* the horizon:
+        # under per-scenario clocks a row can sit at max_slots unfinished
+        # while others still run — it must freeze (no billing, events or
+        # progress), exactly as the lockstep slot walk's global exit
+        # would have frozen it (in_h is constant-True on the slot path)
+        in_h = i < sc["max_slots"]
+        gate = jnp.any(pending, axis=1) & in_h                # [S] live
 
-        # ---- per-slot stats: the hot [S, B] -> [S, V] reduction ---------
+        # ---- per-step stats: the hot [S, B] -> [S, V] reduction ---------
         # One shared pending one-hot feeds every column reduction; its
         # task-axis cumsum yields both per-column counts and each task's
         # queue rank within its column (B-axis order = dispatch priority).
+        # All of it is span-invariant — spans are completion/event-free by
+        # construction (DESIGN.md §2.5) — so one computation serves the
+        # span jump *and* the full step that follows it.
         ohp = ((assign[:, :, None] == iota_v[None]) &
                pending[:, :, None]).astype(jnp.float32)       # [S, B, V]
         cum = jnp.cumsum(ohp, axis=1)
+        cnt = cum[:, -1, :]
 
         def col_sum(w):
             """Per-column sum of the [S, B] weight vector ``w``."""
             return jnp.einsum("sbv,sb->sv", ohp, w)
 
-        if use_kernel:
-            # accelerator path: the Pallas kernel supplies the [S, V]
-            # reductions — counts/max here, migration loads post-progress
-            # inside the event branches.  The one-hot/cumsum below remains
-            # only for the queue rank; a TPU-native rank kernel is the
-            # open item (DESIGN.md §2.3).
-            _, cnt, maxw = mc_vm_stats(assign, rem, v=v, interpret=interpret)
-        else:
-            cnt = cum[:, -1, :]
-            maxw = jnp.max(ohp * rem[:, :, None], axis=1) \
-                if policy.freeze_in_place else None
         rank = jnp.take_along_axis(cum, assign[:, :, None],
                                    axis=2)[:, :, 0] - 1.0
-
-        # ---- progress over [t, t + dt) ----------------------------------
-        active = vstate == VM_ACTIVE
-        live = jnp.clip((t1 - boot) / dt, 0.0, 1.0) * active  # [S, V] f32
-        rate_t = jnp.take_along_axis(live, assign, axis=1)
-        cred_ok = jnp.take_along_axis(credits > 1e-9, assign, axis=1)
         burst_t = burst[assign]
-        sfac = jnp.where((mode == 1) | (burst_t & ~cred_ok), bfrac[assign],
-                         1.0)
-        run = pending & (rank < cores[assign])
+        run0 = pending & (rank < cores[assign])
         if not mem_safe:
             memcum = jnp.take_along_axis(
                 jnp.cumsum(ohp * mem_t[None, :, None], axis=1),
                 assign[:, :, None], axis=2)[:, :, 0]
-            run &= memcum <= memv[assign] + 1e-6
+            run0 &= memcum <= memv[assign] + 1e-6
+
+        cap = ccap[bi][None]
+
+        if adaptive:
+            # ============================================================
+            # Event-horizon jump (DESIGN.md §2.5): per scenario, find the
+            # largest span of *uniform* slots — no tensor event, no AC
+            # boundary, no task completion, no boot edge, no
+            # credit-bucket boundary, no deferred-HADS fire instant — and
+            # advance it in closed form.  Scenarios step their own clocks
+            # (``i`` is [S]): a storm in one scenario never forces the
+            # calm ones to slot-crawl, so iterations track the *worst*
+            # scenario's interesting-slot count, not the batch union.
+            # Each bound below is the first non-uniform slot offset (or
+            # BIG); the multiplicative backoff on the float-derived
+            # bounds (x * (1 - 1e-6), >= 10x the accumulated rounding
+            # error of the divisions producing x) keeps a span from ever
+            # overshooting into the non-uniform region when a ratio
+            # rounds up across an integer, without paying a systematic
+            # one-slot creep at every boundary.
+            # ============================================================
+            BACK = 1.0 - 1e-6
+            t0 = i.astype(jnp.float32) * dt
+            active0 = vstate == VM_ACTIVE
+            live01 = (active0 & (boot <= t0[:, None])).astype(jnp.float32)
+            rate0 = jnp.take_along_axis(live01, assign, axis=1)
+            cred_ok0 = jnp.take_along_axis(credits > 1e-9, assign, axis=1)
+            sfac0 = jnp.where((mode == 1) | (burst_t & ~cred_ok0),
+                              bfrac[assign], 1.0)
+            drem0 = dt * rate0 * speed[assign] * sfac0 * run0
+            spend0 = jnp.einsum("sbk,sb->sk", ohp[:, :, bi],
+                                (run0 & (mode == 0)).astype(jnp.float32))
+
+            # (1) next nonzero event slot, O(1) from the per-scenario
+            # tensor pointer (EventTensor.nxt, built at generation time)
+            m_ev = (ev.nxt[rows, jnp.minimum(i, n_slots - 1)] - i
+                    ).astype(jnp.float32)
+            # (2) next AC boundary (edge e is handled by the step at e-1)
+            if ac_aligned:
+                base, ac = sc["boot_slots"], sc["ac_slots"]
+                q = jnp.maximum(i + 1 - base, 1)
+                e = base + ac * ((q + ac - 1) // ac)
+                m_ac = (e - 1 - i).astype(jnp.float32)
+            else:
+                k_next = jnp.maximum(
+                    jnp.floor((t0 - sc["omega"]) / sc["ac_seconds"]),
+                    0.0) + 1.0
+                e_t = sc["omega"] + sc["ac_seconds"] * k_next
+                m_ac = jnp.maximum(
+                    jnp.ceil(e_t / dt * BACK) - 1.0
+                    - i.astype(jnp.float32), 0.0)
+            # (3) first task completion among running tasks
+            ratio = jnp.where(drem0 > 0.0,
+                              rem / jnp.maximum(drem0, 1e-30), BIG)
+            m_comp = jnp.maximum(
+                jnp.min(jnp.ceil(ratio * BACK), axis=1) - 1.0, 0.0)
+            # (4) boot edges of still-booting active columns
+            kb = jnp.where(active0 & (boot > t0[:, None]),
+                           jnp.floor((boot - t0[:, None]) / dt * BACK), BIG)
+            m_boot = jnp.maximum(jnp.min(kb, axis=1), 0.0)
+            # (5) burstable credit boundaries: a bucket emptying (speed
+            # factor flips), refilling from empty, or reaching cap —
+            # between them the buckets are piecewise linear
+            r_c = dt * live01[:, bi] * crate[bi][None] \
+                - (dt / sc["bperiod"]) * spend0
+            c0 = credits[:, bi]
+            act_b = active0[:, bi]
+            if bi.shape[0]:                # plans without burstables skip
+                rising = act_b & (r_c > 1e-12)
+                kc = jnp.full_like(r_c, BIG)
+                kc = jnp.where(rising & (c0 <= 1e-9), 1.0, kc)
+                kc = jnp.where(rising & (c0 > 1e-9) & (c0 < cap - 1e-6),
+                               jnp.maximum(
+                                   jnp.ceil((cap - c0) / r_c * BACK), 1.0),
+                               kc)
+                kc = jnp.where(act_b & (r_c < -1e-12) & (c0 > 1e-9),
+                               jnp.maximum(
+                                   jnp.ceil((c0 - 1e-9) / (-r_c) * BACK),
+                                   1.0), kc)
+                m_cred = jnp.min(kc, axis=1)
+            else:
+                m_cred = jnp.full(s, BIG, jnp.float32)
+            # (6) deferred-HADS fire instant — frozen columns' max
+            # remaining work is span-invariant, so t_safe is a fixed time
+            if policy.freeze_in_place:
+                maxw0 = jnp.max(ohp * rem[:, :, None], axis=1)
+                t_safe0 = sc["deadline"] - (
+                    sc["omega"] + maxw0 / sc["od_speed"] + sc["restore"]
+                    + sc["margin"])
+                kf = jnp.where((vstate == VM_HIBERNATED) & (cnt > 0.5),
+                               jnp.floor((t_safe0 - t0[:, None]) / dt - 2.0),
+                               BIG)
+                m_fire = jnp.maximum(jnp.min(kf, axis=1), 0.0)
+            else:
+                m_fire = jnp.full(s, BIG, jnp.float32)
+
+            # finished scenarios have no bounds left — they jump straight
+            # to the horizon and exit their clock
+            m_max = jnp.maximum(sc["max_slots"] - 1 - i, 0
+                                ).astype(jnp.float32)
+            bounds = jnp.stack([m_ev, m_ac, m_comp, m_boot, m_cred,
+                                m_fire])                     # [6, S]
+            mf = jnp.clip(jnp.where(gate, jnp.min(bounds, axis=0), BIG),
+                          0.0, m_max)
+            m = mf.astype(jnp.int32)
+            mf = m.astype(jnp.float32)
+
+            # ---- closed-form span advance: m uniform slots at once -----
+            if use_kernel:
+                # fused Pallas kernel: progress decrement + the [S, V]
+                # reductions of the advanced state in one streamed pass
+                rem, _, cnt, maxw = mc_span_advance(
+                    assign, rem, drem0, mf, v=v, interpret=interpret)
+            else:
+                rem = jnp.where(pending,
+                                jnp.maximum(rem - mf[:, None] * drem0, 0.0),
+                                rem)
+                # recompute from the advanced state: a column hibernated
+                # by *this* step's events needs its post-span max (the
+                # m_fire bound above could reuse maxw0 only because it
+                # reads already-hibernated, hence frozen, columns)
+                maxw = jnp.max(ohp * rem[:, :, None], axis=1) \
+                    if policy.freeze_in_place else None
+            billed = billed + mf[:, None] * dt * live01 * gate[:, None]
+            credits = credits.at[:, bi].set(jnp.where(
+                act_b, jnp.clip(c0 + mf[:, None] * r_c, 0.0, cap), c0))
+            i = i + m
+        elif use_kernel:
+            # accelerator path: the Pallas kernel supplies the [S, V]
+            # reductions — counts/max here, migration loads post-progress
+            # inside the event branches.  The one-hot/cumsum above remains
+            # only for the queue rank; a TPU-native rank kernel is the
+            # open item (DESIGN.md §2.3).
+            _, cnt, maxw = mc_vm_stats(assign, rem, v=v, interpret=interpret)
+        else:
+            maxw = jnp.max(ohp * rem[:, :, None], axis=1) \
+                if policy.freeze_in_place else None
+
+        # ================================================================
+        # Full step at slot i (per-scenario) — under "slot" stepping
+        # every slot lands here; under "adaptive" only interesting ones.
+        # ================================================================
+        t = i.astype(jnp.float32) * dt     # [S]; slot covers [t, t + dt)
+        t1 = t + dt
+        # this slot's pregenerated market events (DESIGN.md §2.4)
+        if adaptive:
+            # scenarios sit on different slots: per-row gather
+            ir = jnp.minimum(i, n_slots - 1)
+            hib_k, hib_u = ev.hib_k[rows, ir], ev.hib_u[rows, ir]
+            res_k, res_u = ev.res_k[rows, ir], ev.res_u[rows, ir]
+        else:
+            # lockstep slot walk: one dynamic slice, as before
+            i0 = i[0]
+            hib_k = jax.lax.dynamic_index_in_dim(ev.hib_k, i0, 1,
+                                                 keepdims=False)
+            hib_u = jax.lax.dynamic_index_in_dim(ev.hib_u, i0, 1,
+                                                 keepdims=False)
+            res_k = jax.lax.dynamic_index_in_dim(ev.res_k, i0, 1,
+                                                 keepdims=False)
+            res_u = jax.lax.dynamic_index_in_dim(ev.res_u, i0, 1,
+                                                 keepdims=False)
+
+        # ---- progress over [t, t + dt) ----------------------------------
+        active = vstate == VM_ACTIVE
+        live = jnp.clip((t1[:, None] - boot) / dt, 0.0, 1.0) * active \
+            * in_h[:, None]
+        rate_t = jnp.take_along_axis(live, assign, axis=1)
+        cred_ok = jnp.take_along_axis(credits > 1e-9, assign, axis=1)
+        sfac = jnp.where((mode == 1) | (burst_t & ~cred_ok), bfrac[assign],
+                         1.0)
+        run = run0
         drem = dt * rate_t * speed[assign] * sfac * run
         rem2 = jnp.maximum(rem - drem, 0.0)
         newly = pending & (rem2 <= 0.0)
         frac = jnp.clip(rem / jnp.maximum(drem, 1e-9), 0.0, 1.0)
-        done_at = jnp.where(newly, t + dt * frac, done_at)
+        done_at = jnp.where(newly, t[:, None] + dt * frac, done_at)
 
         # ---- billing (pauses during hibernation, ends at termination /
         # scenario completion) + burstable credit accrual -----------------
         billed = billed + dt * live * gate[:, None]
-        bi = arr["burst_idx"]
         spend_b = jnp.einsum("sbk,sb->sk", ohp[:, :, bi],
                              (run & (mode == 0)).astype(jnp.float32))
         credits = credits.at[:, bi].set(jnp.where(
             active[:, bi],
             jnp.clip(credits[:, bi] + dt * live[:, bi] * crate[bi][None]
-                     - (dt / sc["bperiod"]) * spend_b, 0.0, ccap[bi][None]),
+                     - (dt / sc["bperiod"]) * spend_b, 0.0, cap),
             credits[:, bi]))
 
         rcv = jnp.zeros((s, v), bool)      # columns given tasks this slot
 
         # ---- hibernation events (victims: requested count resolved
         # against the live eligible set — active, booted, spot) -----------
-        hib = _select(hib_u, active & spot[None] & (boot <= t1), hib_k) & \
+        hib = _select(hib_u, active & spot[None] &
+                      (boot <= t1[:, None]), hib_k) & \
             gate[:, None]
         do_hib = jnp.any(hib, axis=1)
         nhib = nhib + jnp.sum(hib, axis=1)
@@ -487,7 +699,7 @@ def _mc_run(arr: dict, sc: dict, ev: EventTensor, *, s: int,
             t_safe = sc["deadline"] - (sc["omega"] + maxw / sc["od_speed"]
                                        + sc["restore"] + sc["margin"])
             fire = (vstate == VM_HIBERNATED) & (cnt > 0.5) & \
-                (t1 >= t_safe - dt) & gate[:, None]
+                (t1[:, None] >= t_safe - dt) & gate[:, None]
             aff2 = (rem2 > 0) & jnp.take_along_axis(fire, assign, axis=1)
             do2 = jnp.any(aff2, axis=1)
 
@@ -506,10 +718,19 @@ def _mc_run(arr: dict, sc: dict, ev: EventTensor, *, s: int,
                 (rem2, assign, mode, vstate, boot, rcv))
 
         # ---- Allocation-Cycle boundary: work stealing + idle termination
+        # is_ac is per-scenario [S] — scenarios on different clocks reach
+        # their AC edges in different loop iterations
         i1 = i + 1
-        is_ac = (i1 > sc["boot_slots"]) & \
-            ((i1 - sc["boot_slots"]) % sc["ac_slots"] == 0)
-        booted = boot <= t1
+        if ac_aligned:
+            is_ac = (i1 > sc["boot_slots"]) & \
+                ((i1 - sc["boot_slots"]) % sc["ac_slots"] == 0)
+        else:
+            # dt need not divide ω/AC under adaptive stepping: the slot
+            # whose (t, t1] interval contains an AC edge handles it
+            f1 = jnp.floor((t1 - sc["omega"]) / sc["ac_seconds"])
+            f0 = jnp.floor((t - sc["omega"]) / sc["ac_seconds"])
+            is_ac = (t1 >= sc["omega"] + sc["ac_seconds"]) & (f1 > f0)
+        booted = boot <= t1[:, None]
 
         def ac_block(ops):
             vstate, assign, mode = ops
@@ -518,7 +739,7 @@ def _mc_run(arr: dict, sc: dict, ev: EventTensor, *, s: int,
                 a, m, cl = assign, mode, cnt_live
                 for _ in range(steal_rounds):
                     idle = (vstate == VM_ACTIVE) & booted & (cl < 0.5) & \
-                        gate[:, None]
+                        (is_ac & gate)[:, None]
                     thief = jnp.argmin(jnp.where(idle, iota_v, v + 1),
                                        axis=1).astype(jnp.int32)
                     has_thief = jnp.any(idle, axis=1)
@@ -543,39 +764,97 @@ def _mc_run(arr: dict, sc: dict, ev: EventTensor, *, s: int,
                         - shift * (iota_v == vict[:, None])
                 assign, mode, cnt_live = a, m, cl
             term = (vstate == VM_ACTIVE) & booted & (cnt_live < 0.5) & \
-                ~burst[None] & ~rcv & gate[:, None]
+                ~burst[None] & ~rcv & (is_ac & gate)[:, None]
             vstate = jnp.where(term, VM_TERMINATED, vstate)
             return vstate, assign, mode
 
         (vstate, assign, mode) = jax.lax.cond(
-            is_ac, ac_block, lambda ops: ops, (vstate, assign, mode))
+            jnp.any(is_ac), ac_block, lambda ops: ops,
+            (vstate, assign, mode))
 
-        return (i1, vstate, boot, billed, credits, rem2, assign, mode,
-                done_at, nhib, nres)
+        return (jnp.minimum(i1, sc["max_slots"]), vstate, boot, billed,
+                credits, rem2, assign, mode, done_at, nhib, nres,
+                nsteps + 1, visited.at[rows, i].set(True, mode="drop"))
 
     out = jax.lax.while_loop(cond, step, carry)
-    (_, _, _, billed, _, rem, _, _, done_at, nhib, nres) = out
+    (i_fin, _, _, billed, _, rem, _, _, done_at, nhib, nres, nsteps,
+     visited) = out
     makespan = jnp.max(jnp.where(done_at < BIG * 0.5, done_at, 0.0), axis=1)
     return {"cost": jnp.sum(billed * price[None], axis=1),
             "makespan": makespan,
             "unfinished": jnp.sum(rem > 0.0, axis=1),
-            "billed": billed, "n_hib": nhib, "n_res": nres}
+            "billed": billed, "n_hib": nhib, "n_res": nres,
+            "n_steps": nsteps, "exit_slots": i_fin, "visited": visited}
+
+
+@functools.lru_cache(maxsize=2)
+def _mc_jit(donate: bool):
+    """jit the engine, optionally donating the event tensor's buffers —
+    the dominant HBM allocation (two f32 [S, N, V] score tensors) — so
+    XLA may alias them into the while-loop carry workspace on
+    accelerators.  ``run_mc`` donates (it owns a fresh tensor per call);
+    ``run_mc_events`` defaults to not donating because callers routinely
+    reuse pregenerated tensors (parity tests, fleet warm-up runs)."""
+    return jax.jit(_mc_run_impl, static_argnames=(
+        "s", "policy", "steal_rounds", "mig_rounds", "mem_safe",
+        "use_kernel", "interpret", "stepping", "ac_aligned"),
+        donate_argnums=(2,) if donate else ())
 
 
 # ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
+def _dt_aligned(cfg: CloudConfig, dt: float) -> bool:
+    """True when ``dt`` divides both ω and AC, so boundary slots can use
+    exact integer arithmetic (and the slot engine is admissible)."""
+    return all(abs(q / dt - round(q / dt)) <= 1e-9
+               for q in (cfg.boot_overhead_s, cfg.allocation_cycle_s))
+
+
 def _check_dt(cfg: CloudConfig, params: MCParams) -> None:
-    for name, q in (("boot overhead", cfg.boot_overhead_s),
-                    ("allocation cycle", cfg.allocation_cycle_s)):
-        if abs(q / params.dt - round(q / params.dt)) > 1e-9:
-            raise ValueError(f"dt={params.dt} must divide the {name} ({q}s) "
-                             f"so AC boundaries land on slot edges")
+    """The fixed-slot engine can only handle boundaries on grid points;
+    the adaptive engine treats them as first-class jump targets and
+    accepts any ``dt`` (DESIGN.md §2.5)."""
+    if params.stepping == "slot" and not _dt_aligned(cfg, params.dt):
+        raise ValueError(
+            f"dt={params.dt} must divide the boot overhead "
+            f"({cfg.boot_overhead_s}s) and the allocation cycle "
+            f"({cfg.allocation_cycle_s}s) under stepping='slot' — use "
+            f"the adaptive engine for off-grid boundaries")
+
+
+#: (job, plan, cfg, ovh) -> flattened engine arrays; keyed by object
+#: identity with strong refs so repeated ``run_mc``/``mc_sweep`` calls on
+#: the same plan (the S=1 hot case) skip the numpy flattening pass.  The
+#: jitted engine itself is cached by jax on (shapes, PolicyConfig, flags),
+#: which the ``MCParams`` knobs map onto — together the two caches make
+#: every warm call dispatch-only.
+_PLAN_CACHE: dict = {}
+_PLAN_CACHE_MAX = 64
+
+
+def _plan_arrays_cached(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
+                        ovh: float) -> tuple[dict, list[int], bool]:
+    key = (id(job), id(plan), id(cfg), float(ovh))
+    hit = _PLAN_CACHE.get(key)
+    if hit is not None and hit[0] is job and hit[1] is plan \
+            and hit[2] is cfg:
+        return hit[3], hit[4], hit[5]
+    arr, uids = _plan_arrays(job, plan, cfg, ovh)
+    # memory can never bind: even a full complement of the largest tasks
+    # fits every column -> skip the per-slot memory-cumsum pass
+    mem_safe = bool(float(np.max(np.asarray(arr["mem_t"])))
+                    * float(np.max(np.asarray(arr["cores"])))
+                    <= float(np.min(np.asarray(arr["memv"]))) + 1e-6)
+    if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+        _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+    _PLAN_CACHE[key] = (job, plan, cfg, arr, uids, mem_safe)
+    return arr, uids, mem_safe
 
 
 def run_mc_events(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
                   ev: EventTensor, params: MCParams = MCParams(),
-                  label: str = "custom") -> MCResult:
+                  label: str = "custom", donate: bool = False) -> MCResult:
     """Run the dynamic phase over a pregenerated event tensor.
 
     The tensor defines the run: S scenarios (``params.n_scenarios`` is
@@ -585,30 +864,36 @@ def run_mc_events(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
     horizon so late scenarios finish).  ``ev`` may carry any
     ``jax.sharding`` placement on the scenario axis — the engine's state
     is batched over S, so GSPMD shards the whole run with it
-    (``sim.fleet`` uses this to spread a grid across devices).
+    (``sim.fleet`` uses this to spread a grid across devices).  Under
+    adaptive stepping the tensor's next-event index is used (and built
+    here if the tensor arrived without one).  ``donate=True`` lets XLA
+    consume the tensor's buffers (don't reuse ``ev`` afterwards).
     """
     _check_dt(cfg, params)
-    arr, uids = _plan_arrays(job, plan, cfg, params.ovh)
-    ev.validate()
+    if params.stepping not in ("adaptive", "slot"):
+        raise ValueError(f"unknown stepping {params.stepping!r} "
+                         "(adaptive/slot)")
+    arr, uids, mem_safe = _plan_arrays_cached(job, plan, cfg, params.ovh)
+    ev.validate()                   # diagnose malformed tensors first —
+    if params.stepping == "adaptive":   # with_index would crash rawly
+        ev = ev.with_index()
     if ev.n_vms != len(uids):
         raise ValueError(
             f"event tensor has V={ev.n_vms} columns, plan has "
             f"{len(uids)} launchable instances — regenerate the tensor "
             f"for this plan (see plan_column_uids)")
     sc = _scalars(job, cfg, params, ev.n_slots)
-    # memory can never bind: even a full complement of the largest tasks
-    # fits every column -> skip the per-slot memory-cumsum pass
-    mem_safe = bool(float(np.max(np.asarray(arr["mem_t"])))
-                    * float(np.max(np.asarray(arr["cores"])))
-                    <= float(np.min(np.asarray(arr["memv"]))) + 1e-6)
     on_cpu = jax.default_backend() == "cpu"
     use_kernel = params.use_kernel if params.use_kernel is not None \
         else not on_cpu
     interpret = params.interpret if params.interpret is not None else on_cpu
-    out = _mc_run(arr, sc, ev, s=ev.n_scenarios, policy=plan.policy,
-                  steal_rounds=params.steal_rounds,
-                  mig_rounds=params.mig_rounds, mem_safe=mem_safe,
-                  use_kernel=use_kernel, interpret=interpret)
+    out = _mc_jit(donate and not on_cpu)(
+        arr, sc, ev, s=ev.n_scenarios, policy=plan.policy,
+        steal_rounds=params.steal_rounds,
+        mig_rounds=params.mig_rounds, mem_safe=mem_safe,
+        use_kernel=use_kernel, interpret=interpret,
+        stepping=params.stepping,
+        ac_aligned=_dt_aligned(cfg, params.dt))
     out = jax.device_get(out)
     unfinished = out["unfinished"].astype(int)
     makespan = out["makespan"]
@@ -620,7 +905,9 @@ def run_mc_events(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
         unfinished=unfinished,
         n_hibernations=out["n_hib"].astype(int),
         n_resumes=out["n_res"].astype(int),
-        billed_s=out["billed"], vm_uids=list(uids))
+        billed_s=out["billed"], vm_uids=list(uids),
+        stepping=params.stepping, n_steps=int(out["n_steps"]),
+        exit_slots=out["exit_slots"].astype(int), visited=out["visited"])
 
 
 def run_mc(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
@@ -631,7 +918,8 @@ def run_mc(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
     ``scenario`` accepts a Table V ``Scenario`` (or its name) — mapped to
     the bit-compatible ``market.PoissonProcess`` — or any
     ``market.MarketProcess``.  The process is sampled into an event tensor
-    for this plan's columns and handed to ``run_mc_events``.
+    for this plan's columns and handed to ``run_mc_events`` (with its
+    buffers donated on accelerators — the tensor is owned by this call).
     """
     process = as_process(scenario)
     _check_dt(cfg, params)
@@ -640,7 +928,8 @@ def run_mc(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
         n_slots=n_slots_for(job.deadline_s, params),
         v=len(plan_column_uids(plan)), dt=params.dt,
         deadline_s=job.deadline_s)
-    return run_mc_events(job, plan, cfg, ev, params, label=process.name)
+    return run_mc_events(job, plan, cfg, ev, params, label=process.name,
+                         donate=True)
 
 
 def simulate_mc(job: Job, cfg: CloudConfig,

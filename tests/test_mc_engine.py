@@ -150,6 +150,12 @@ def test_scenario_trends(j60, plan_bh, plan_hads):
 
 
 def test_dt_validation(j60, plan_bh):
+    """The fixed-slot engine needs dt on the ω/AC grid; the adaptive
+    engine treats boundaries as jump targets and accepts any dt
+    (DESIGN.md §2.5 — exercised end-to-end in tests/test_stepping.py)."""
     with pytest.raises(ValueError):
         run_mc(j60, plan_bh, CFG, SC_NONE,
-               MCParams(n_scenarios=1, dt=37.0))
+               MCParams(n_scenarios=1, dt=37.0, stepping="slot"))
+    res = run_mc(j60, plan_bh, CFG, SC_NONE,
+                 MCParams(n_scenarios=1, dt=37.0))
+    assert res.unfinished[0] == 0
