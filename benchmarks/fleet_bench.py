@@ -22,8 +22,9 @@ import time
 import jax
 import numpy as np
 
-from repro.core.dynamic import POLICIES, build_primary_map
+from repro.core.dynamic import POLICIES, build_primary_map, policy
 from repro.core.ils import ILSParams
+from repro.core.ils_jax import BatchedILSParams
 from repro.core.types import CloudConfig
 from repro.sim.fleet import (sample_grid_events, scenario_sharding,
                              shard_events)
@@ -33,7 +34,12 @@ from repro.sim.mc_engine import MCParams, run_mc_events
 from repro.sim.workloads import make_job
 
 ILS_FAST = ILSParams(max_iteration=25, max_attempt=15, seed=3)
+BATCHED_FAST = BatchedILSParams(iterations=25, seed=3)
 POLICY_GRID = ("burst-hads", "hads", "ils-ondemand")
+#: beyond-paper lattice cells tracked for perf/behaviour trajectory
+#: (BENCH_dynamic.json rollup): the paper policies ± one axis each.
+LATTICE_GRID = ("burst-hads+nosteal", "hads+burst", "hads+steal",
+                "burst-hads+freeze")
 
 
 def process_grid(deadline_s: float) -> list:
@@ -59,7 +65,8 @@ def run(job_names: tuple[str, ...] = ("J60", "J80"),
         procs = process_grid(job.deadline_s)
         for pol_name in POLICY_GRID:
             plan = build_primary_map(job, cfg, POLICIES[pol_name],
-                                     ILS_FAST, engine="batched")
+                                     ILS_FAST, engine="batched",
+                                     batched_params=BATCHED_FAST)
             evs = sample_grid_events(job, plan, procs, params)
             ev_all = shard_events(EventTensor.concat(evs),
                                   scenario_sharding(len(procs) * s))
@@ -110,3 +117,55 @@ def smoke() -> list[dict]:
     """CI-sized variant: same ≥2 jobs × 3 policies × 3 processes grid,
     tiny scenario batch."""
     return run(job_names=("J12", "J16"), s=8)
+
+
+def lattice(job_names: tuple[str, ...] = ("J60",), s: int = 64,
+            dt: float = 30.0) -> list[dict]:
+    """Policy-lattice cell grid: the paper policies perturbed one axis at
+    a time (``LATTICE_GRID``), each (job, policy) run as one fused
+    engine call over sc5 + bursty-Weibull tensors.  Rows feed the
+    root-level ``BENCH_dynamic.json`` rollup (``benchmarks/run.py``) so
+    the new combos get steps/throughput trajectory coverage from day one
+    — ``steps`` is deterministic per grid+seed and is what the CI gate
+    (``scripts/check_bench_regression.py``) diffs."""
+    cfg = CloudConfig()
+    params = MCParams(n_scenarios=s, dt=dt, seed=0)
+    rows: list[dict] = []
+    for job_name in job_names:
+        job = make_job(job_name)
+        procs = process_grid(job.deadline_s)[:2]      # sc5 + weibull
+        for spec in LATTICE_GRID:
+            plan = build_primary_map(job, cfg, policy(spec), ILS_FAST,
+                                     engine="batched",
+                                     batched_params=BATCHED_FAST)
+            evs = sample_grid_events(job, plan, procs, params)
+            ev_all = shard_events(EventTensor.concat(evs),
+                                  scenario_sharding(len(procs) * s))
+            run_mc_events(job, plan, cfg, ev_all, params)       # warm
+            t0 = time.perf_counter()
+            res = run_mc_events(job, plan, cfg, ev_all, params)
+            wall = time.perf_counter() - t0
+            for i, proc in enumerate(procs):
+                sl = slice(i * s, (i + 1) * s)
+                rows.append({
+                    "table": "lattice", "job": job_name, "policy": spec,
+                    "process": proc.name, "s": s, "dt": dt,
+                    "scen_per_s": round(len(procs) * s / max(wall, 1e-9),
+                                        1),
+                    "steps": res.n_steps,
+                    "slots_skipped_frac": round(
+                        1.0 - float(res.visited[sl].sum())
+                        / max(1, int(res.exit_slots[sl].sum())), 3),
+                    "cost_mean": round(float(res.cost[sl].mean()), 4),
+                    "met_frac":
+                        round(float(res.deadline_met[sl].mean()), 3),
+                    "hib_mean":
+                        round(float(res.n_hibernations[sl].mean()), 2),
+                })
+    return rows
+
+
+def lattice_smoke() -> list[dict]:
+    """CI-sized lattice cells — same J60 grid at a tiny batch so the
+    committed rollup baseline and the CI smoke run share keys."""
+    return lattice(s=8)

@@ -13,7 +13,6 @@ from repro.core.dynamic import BURST_HADS, HADS, ILS_ONDEMAND
 from repro.core.ils import ILSParams
 from repro.core.types import CloudConfig, Market
 from repro.sim.events import SCENARIOS, SC_NONE
-from repro.sim.simulator import simulate
 from repro.sim.workloads import ALL_JOBS, make_job
 
 CFG = CloudConfig()

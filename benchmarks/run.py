@@ -62,7 +62,7 @@ DYNAMIC_ROLLUP = os.path.join(os.path.dirname(__file__), "..",
 
 
 def dynamic_rollup(sim_rows: list[dict], smoke: bool,
-                   outdir: str) -> list[dict]:
+                   outdir: str, lattice_rows: list[dict] = ()) -> list[dict]:
     """Headline dynamic-engine throughput per (job, policy, process, S,
     dt, stepping) + slots-skipped fraction, written to the root-level
     ``BENCH_dynamic.json`` and appended to ``results/trajectory.jsonl``
@@ -91,6 +91,17 @@ def dynamic_rollup(sim_rows: list[dict], smoke: bool,
             row["vs_slot"] = round(r[f"{stepping}_scen_per_s"]
                                    / r["slot_scen_per_s"], 2)
             rows.append(row)
+    # policy-lattice cells (fleet_bench.lattice): adaptive-only fused
+    # runs — `steps` is the deterministic signal the CI gate diffs
+    for r in lattice_rows:
+        if r.get("table") != "lattice":
+            continue
+        rows.append({"table": "dynamic",
+                     **{k: r[k] for k in ("job", "policy", "process",
+                                          "s", "dt")},
+                     "stepping": "adaptive",
+                     "scen_per_s": r["scen_per_s"], "steps": r["steps"],
+                     "slots_skipped_frac": r["slots_skipped_frac"]})
 
     def key_of(row):
         return tuple(row.get(k) for k in ("job", "policy", "process",
@@ -140,15 +151,19 @@ def main() -> None:
     emit("table3", pt.table3_jobs(), fh)
 
     print("# Dynamic phase: DES vs fixed-slot vs event-horizon MC engine")
-    from benchmarks import sim_bench
+    from benchmarks import fleet_bench, sim_bench
     sim_rows = emit("sim_bench",
                     sim_bench.smoke() if args.smoke else sim_bench.run(), fh)
     _write_json(os.path.join(outdir, "BENCH_sim.json"), sim_rows)
-    dynamic_rollup(sim_rows, args.smoke, outdir)
+
+    print("# Policy-lattice cells (paper policies ± one axis, fused)")
+    lattice_rows = emit("lattice",
+                        fleet_bench.lattice_smoke() if args.smoke
+                        else fleet_bench.lattice(), fh)
+    dynamic_rollup(sim_rows, args.smoke, outdir, lattice_rows)
 
     print("# Market/fleet: jobs x policies x market-process grid "
           "(sharded batch vs per-cell loop)")
-    from benchmarks import fleet_bench
     fleet_rows = emit(
         "fleet",
         fleet_bench.smoke() if args.smoke

@@ -1,4 +1,4 @@
-"""Market-process zoo: one policy, five interruption models, one grid.
+"""Market-process zoo: one policy, five interruption models, one call.
 
   PYTHONPATH=src python examples/market_models.py [J60|J80|J100] [S]
 
@@ -7,8 +7,10 @@ Burst-HADS plan is stress-tested under (1) the paper's Poisson sc5,
 (2) bursty Weibull renewals, (3) a Markov-modulated calm/turbulent
 storm, (4) correlated mass-hibernation shocks, and (5) an empirical
 trace written to and replayed from CSV — every process compiles to the
-same event-tensor interface, so all five drive the identical jitted MC
-engine.  Finishes with a small `evaluate_fleet` grid across policies.
+same event-tensor interface, and ``repro.api.sweep`` fuses all five
+into ONE scenario-sharded engine call.  Finishes with a lattice grid
+across policies (including beyond-paper points like ``hads+burst``) on
+the fleet backend.
 """
 import os
 import sys
@@ -16,22 +18,21 @@ import tempfile
 
 sys.path.insert(0, "src")
 
-from repro.core.dynamic import BURST_HADS, build_primary_map
+from repro import api
 from repro.core.ils import ILSParams
-from repro.core.types import CloudConfig
+from repro.core.ils_jax import BatchedILSParams
 from repro.sim import (CorrelatedShockProcess, MarkovModulatedProcess,
                        PoissonProcess, TraceReplayProcess, WeibullProcess,
-                       evaluate_fleet, make_job)
-from repro.sim.mc_engine import MCParams, run_mc
+                       make_job)
+from repro.sim.mc_engine import MCParams
 
 
 def main() -> None:
     job_name = sys.argv[1] if len(sys.argv) > 1 else "J60"
     s = int(sys.argv[2]) if len(sys.argv) > 2 else 256
-    cfg, job = CloudConfig(), make_job(job_name)
+    job = make_job(job_name)
     d = job.deadline_s
     params = ILSParams(max_iteration=60, max_attempt=25, seed=0)
-    plan = build_primary_map(job, cfg, BURST_HADS, params)
 
     # an "empirical" trace: two early interruptions, one recovery
     trace = TraceReplayProcess.from_events(
@@ -54,28 +55,30 @@ def main() -> None:
     ]
 
     print(f"{job.name}: Burst-HADS plan under {len(processes)} market "
-          f"processes, S={s} scenarios each")
+          f"processes, S={s} scenarios each (one fused engine call)")
     print(f"{'process':16s} {'cost':>8s} {'p95':>8s} {'makespan':>9s} "
           f"{'met%':>6s} {'hib':>5s} {'res':>5s}")
-    for proc in processes:
-        r = run_mc(job, plan, cfg, proc, MCParams(n_scenarios=s, seed=1))
-        sm = r.summary()
-        print(f"{proc.name:16s} {sm['cost']['mean']:8.4f} "
-              f"{sm['cost']['p95']:8.4f} {sm['makespan']['mean']:9.0f} "
-              f"{100 * sm['deadline_met_frac']:6.1f} "
-              f"{sm['mean_hibernations']:5.2f} {sm['mean_resumes']:5.2f}")
+    rows = api.sweep(job, "burst-hads", processes=processes,
+                     backend="mc-adaptive",
+                     mc=MCParams(n_scenarios=s, seed=1), ils=params)
+    for r in rows:
+        print(f"{r.process:16s} {r.cost['mean']:8.4f} "
+              f"{r.cost['p95']:8.4f} {r.makespan['mean']:9.0f} "
+              f"{100 * r.deadline_met_frac:6.1f} "
+              f"{r.mean_hibernations:5.2f} {r.mean_resumes:5.2f}")
 
-    print("\nfleet grid: 1 job x 3 policies x 3 processes, one sharded "
-          "engine call per (job, policy)...")
-    fleet = evaluate_fleet([job], ["burst-hads", "hads", "ils-ondemand"],
-                           processes[:3],
-                           params=MCParams(n_scenarios=min(s, 128), seed=1),
-                           ils_params=params)
-    for row in fleet.rows:
-        print(f"  {row['policy']:13s} {row['process']:16s} "
-              f"cost={row['cost']['mean']:.4f} "
-              f"met={100 * row['deadline_met_frac']:.0f}%")
-    print("meta:", fleet.meta())
+    print("\nlattice grid: 1 job x 4 policies x 3 processes on the fleet "
+          "backend (batched-ILS planning, one sharded call per policy)...")
+    fleet = api.sweep(job, ["burst-hads", "hads", "hads+burst",
+                            "ils-ondemand"], processes=processes[:3],
+                      backend="fleet",
+                      mc=MCParams(n_scenarios=min(s, 128), seed=1),
+                      ils=params,
+                      batched_ils=BatchedILSParams(iterations=60, seed=0))
+    for r in fleet:
+        print(f"  {r.policy:26s} {r.process:16s} "
+              f"cost={r.cost['mean']:.4f} "
+              f"met={100 * r.deadline_met_frac:.0f}%")
 
 
 if __name__ == "__main__":

@@ -13,7 +13,11 @@ documentation can never silently rot):
 2. every `src/...` path named in README.md exists;
 3. every DESIGN.md section anchor cited anywhere in README.md or the
    `src/repro/sim` docstrings (the `DESIGN.md §X[.Y]` convention) exists
-   as a heading in DESIGN.md.
+   as a heading in DESIGN.md;
+4. neither README.md nor any example calls a deprecated pre-facade entry
+   point (``simulate`` / ``simulate_mc`` / ``mc_sweep`` — shims onto
+   ``repro.api``, see ``repro.compat``): user-facing surfaces must stay
+   on the facade.
 """
 from __future__ import annotations
 
@@ -83,6 +87,31 @@ def check_python_blocks(md: str, smoke: bool) -> list[str]:
     return errors
 
 
+#: deprecated pre-facade entry points (repro.compat shims); a call like
+#: `simulate(` anywhere in README or the examples fails the gate.  The
+#: regex is call-shaped on purpose: prose mentions stay legal.
+_DEPRECATED_CALL = re.compile(r"\b(?:simulate_mc|mc_sweep|simulate)\s*\(")
+
+
+def check_deprecated_calls(md: str) -> list[str]:
+    sources = {"README.md": md}
+    ex_dir = os.path.join(REPO, "examples")
+    for name in sorted(os.listdir(ex_dir)):
+        if name.endswith(".py"):
+            with open(os.path.join(ex_dir, name)) as f:
+                sources[f"examples/{name}"] = f.read()
+    errors = []
+    for label, text in sources.items():
+        for i, line in enumerate(text.splitlines(), 1):
+            m = _DEPRECATED_CALL.search(line)
+            if m:
+                errors.append(
+                    f"{label}:{i} calls deprecated entry point "
+                    f"{m.group(0).rstrip('(').strip()!r} — migrate to "
+                    f"repro.api (run/sweep)")
+    return errors
+
+
 def check_paths(md: str) -> list[str]:
     paths = set(re.findall(r"`(src/[\w/.]+)`", md))
     return [f"README.md names missing path {p}" for p in sorted(paths)
@@ -121,7 +150,8 @@ def main() -> int:
 
     with open(os.path.join(REPO, "README.md")) as f:
         md = f.read()
-    errors = check_paths(md) + check_design_anchors()
+    errors = check_paths(md) + check_design_anchors() \
+        + check_deprecated_calls(md)
     print(f"# structural checks: {'ok' if not errors else 'FAILED'}")
     errors += check_python_blocks(md, smoke=args.smoke)
     if errors:

@@ -1,45 +1,37 @@
-"""Smoke: simulate J60 under all three policies, no-hibernation + sc2/sc5,
-then the batched Monte-Carlo engine on the same cells."""
+"""Smoke: J60 under all three paper policies plus two beyond-paper
+lattice points, DES + batched Monte-Carlo, all through ``repro.api``."""
 import time
 
-from repro.core.dynamic import BURST_HADS, HADS, ILS_ONDEMAND, \
-    build_primary_map
+from repro import api
 from repro.core.ils import ILSParams
-from repro.core.types import CloudConfig
-from repro.sim.events import SCENARIOS, SC_NONE
-from repro.sim.mc_engine import MCParams, run_mc
-from repro.sim.simulator import simulate
-from repro.sim.workloads import make_job
+from repro.sim.mc_engine import MCParams
 
-cfg = CloudConfig()
-job = make_job("J60")
 params = ILSParams(max_iteration=60, max_attempt=25, seed=3)
 
-print(f"{'policy':14s} {'scenario':9s} {'cost':>8s} {'makespan':>9s} "
+print(f"{'policy':22s} {'scenario':9s} {'cost':>8s} {'makespan':>9s} "
       f"{'ok':>3s} {'hib':>4s} {'res':>4s} {'dynOD':>6s} counters")
-for policy in (BURST_HADS, HADS, ILS_ONDEMAND):
+for pol in ("burst-hads", "hads", "ils-ondemand"):
     for sc_name in ("none", "sc2", "sc5"):
-        if policy is ILS_ONDEMAND and sc_name != "none":
+        if pol == "ils-ondemand" and sc_name != "none":
             continue
         t0 = time.time()
-        r = simulate(job, cfg, policy, SCENARIOS[sc_name], seed=11,
-                     params=params)
-        print(f"{r.policy:14s} {r.scenario:9s} ${r.cost:7.3f} "
+        r = api.run(job="J60", policy=pol, process=sc_name, backend="des",
+                    seed=11, ils=params).raw
+        print(f"{r.policy:22s} {r.scenario:9s} ${r.cost:7.3f} "
               f"{r.makespan:8.0f}s {str(r.deadline_met):>3s} "
               f"{r.n_hibernations:4d} {r.n_resumes:4d} "
               f"{r.n_dynamic_ondemand:6d} {r.counters} "
               f"({time.time()-t0:.1f}s)")
 
-print("\nMonte-Carlo engine (64 traces per cell):")
-for policy in (BURST_HADS, HADS):
-    plan = build_primary_map(job, cfg, policy, params)
+print("\nMonte-Carlo engine (64 traces per cell, lattice points included):")
+for pol in ("burst-hads", "hads", "burst-hads+nosteal", "hads+burst"):
     for sc_name in ("none", "sc5"):
         t0 = time.time()
-        m = run_mc(job, plan, cfg, SCENARIOS[sc_name],
-                   MCParams(n_scenarios=64, dt=30.0, seed=11))
-        s = m.summary()
-        print(f"{policy.name:14s} {sc_name:9s} "
-              f"${s['cost']['mean']:6.3f}±{s['cost']['ci95']:.3f} "
-              f"{s['makespan']['mean']:7.0f}s "
-              f"met {100 * s['deadline_met_frac']:3.0f}% "
+        r = api.run(job="J60", policy=pol, process=sc_name,
+                    backend="mc-adaptive", seed=11, ils=params,
+                    mc=MCParams(n_scenarios=64, dt=30.0, seed=11))
+        print(f"{r.policy:34s} {sc_name:9s} "
+              f"${r.cost['mean']:6.3f}±{r.cost['ci95']:.3f} "
+              f"{r.makespan['mean']:7.0f}s "
+              f"met {100 * r.deadline_met_frac:3.0f}% "
               f"({time.time()-t0:.1f}s)")

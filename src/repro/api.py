@@ -1,0 +1,317 @@
+"""``repro.api`` — one declarative experiment facade over every engine.
+
+The repo grew four ways to execute the paper's pipeline — the
+discrete-event simulator (one exact trace, ``sim.simulator``), the
+batched Monte-Carlo engine in its fixed-slot and event-horizon steppings
+(``sim.mc_engine``), and the fused fleet pipeline (``sim.fleet``) — each
+with its own signature and result shape.  This module is the single
+entry point over all of them (DESIGN.md §2.6):
+
+* ``Experiment`` — a declarative spec: job, lattice policy
+  (``core.dynamic.policy`` specs like ``"hads+burst"`` work directly),
+  market process, backend (``"des" | "mc-slot" | "mc-adaptive" |
+  "fleet"``) and engine knobs (``MCParams``, ``ILSParams``,
+  ``BatchedILSParams``);
+* ``run`` — execute one experiment, returning a unified ``Result`` row
+  (identical schema on every backend: cost/makespan distribution stats,
+  deadline-met / unfinished fractions, event means) with the backend's
+  native result attached as ``Result.raw``;
+* ``sweep`` — expand a jobs x policies x processes grid.  MC/fleet
+  backends route every (job, policy) cell through the fleet pipeline's
+  concat-S fusion — all processes in ONE scenario-sharded engine call —
+  instead of a Python loop per cell; the DES backend loops exact traces.
+
+The primary plan (Algorithm 1) is cached across backends: running the
+same (job, policy, ILS knobs) cell on the DES and then on an MC backend
+plans once.  The engine-level primitives (``Simulator``, ``run_mc``,
+``run_mc_events``, ``evaluate_fleet``) stay public for code that needs
+raw arrays or pregenerated tensors; the legacy one-shot wrappers
+(``simulate``, ``simulate_mc``, ``mc_sweep``) are deprecated shims onto
+this module (``repro.compat``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core.dynamic import (POLICIES, PolicyConfig, PrimaryPlan,
+                                build_primary_map, make_policy, policy)
+from repro.core.ils import ILSParams
+from repro.core.ils_jax import BatchedILSParams
+from repro.core.types import CloudConfig, Job
+from repro.sim.events import Scenario
+from repro.sim.market import EventTensor, PoissonProcess, as_process
+from repro.sim.mc_engine import (MCParams, MCResult, dist_stats, run_mc,
+                                 run_mc_events)
+from repro.sim.simulator import SimResult, Simulator
+from repro.sim.workloads import make_job
+
+__all__ = ["BACKENDS", "BatchedILSParams", "CloudConfig", "Experiment",
+           "ILSParams", "MCParams", "POLICIES", "Result", "make_job",
+           "make_policy", "policy", "run", "sweep"]
+
+#: execution backends: exact one-trace DES, fixed-slot MC, event-horizon
+#: MC, and the fused/sharded fleet pipeline (batched-ILS planning).
+BACKENDS = ("des", "mc-slot", "mc-adaptive", "fleet")
+
+_DEFAULT_CFG = CloudConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class Experiment:
+    """Declarative spec of one (job, policy, process, backend) run.
+
+    ``job``/``policy``/``process`` accept the same widenings as the
+    engines: job names (``make_job``), policy names / ``"+"`` specs
+    (``core.dynamic.policy``), Table V scenario names / ``Scenario`` /
+    any ``MarketProcess``.  ``seed`` (when set) overrides both
+    ``mc.seed`` and the DES trace seed so one knob reseeds the whole
+    experiment."""
+
+    job: Any
+    policy: Any = "burst-hads"
+    process: Any = "none"
+    backend: str = "mc-adaptive"
+    cfg: CloudConfig | None = None
+    mc: MCParams = MCParams()
+    ils: ILSParams | None = None
+    batched_ils: BatchedILSParams | None = None
+    seed: int | None = None
+    keep_trace: bool = False
+
+
+@dataclasses.dataclass
+class Result:
+    """One tidy row — the same schema on every backend.
+
+    Distribution fields are ``dist_stats`` dicts (mean/std/ci95/p95);
+    the DES backend reports its single trace as a degenerate
+    distribution (std = ci95 = 0, p95 = mean) so downstream code never
+    branches on the backend.  ``raw`` carries the backend-native result
+    (``SimResult`` | ``MCResult`` | None for fused sweep rows)."""
+
+    job: str
+    policy: str
+    process: str
+    backend: str
+    s: int                    # number of traces behind the row
+    dt: float | None          # MC slot width; None for the DES
+    cost: dict
+    makespan: dict
+    deadline_met_frac: float
+    unfinished_frac: float
+    mean_hibernations: float
+    mean_resumes: float
+    raw: Any = None
+
+    def row(self) -> dict:
+        """The tidy-row dict (everything but ``raw`` — detached first so
+        the backend-native arrays are never deep-copied)."""
+        d = dataclasses.asdict(dataclasses.replace(self, raw=None))
+        d.pop("raw")
+        return d
+
+    def legacy_summary(self) -> dict:
+        """The pre-facade ``mc_sweep`` row schema, kept for the shim."""
+        return {"policy": self.policy, "scenario": self.process,
+                "n": self.s, "cost": self.cost, "makespan": self.makespan,
+                "deadline_met_frac": self.deadline_met_frac,
+                "mean_hibernations": self.mean_hibernations,
+                "mean_resumes": self.mean_resumes}
+
+
+# ---------------------------------------------------------------------------
+# Normalization + the cross-backend plan cache
+# ---------------------------------------------------------------------------
+def _backend(name: str) -> str:
+    b = {"mc": "mc-adaptive"}.get(name, name)
+    if b not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r} (one of {BACKENDS}; "
+                         f"'mc' aliases 'mc-adaptive')")
+    return b
+
+
+def _as_scenario(spec) -> Scenario:
+    """DES traces replay numpy event lists — only Poisson/Table V
+    processes have one (DESIGN.md §2.4)."""
+    if isinstance(spec, Scenario):
+        return spec
+    p = as_process(spec)
+    if isinstance(p, PoissonProcess):
+        return Scenario(p.name, p.k_h, p.k_r)
+    raise TypeError(
+        f"backend='des' replays Table V / Poisson scenarios only, got "
+        f"{type(p).__name__} — use an MC backend for arbitrary market "
+        f"processes")
+
+
+#: (cfg id, job identity, policy, ILS knobs, engine) -> (cfg, job, plan);
+#: small LRU.  Keyed on job *contents* (name/size/deadline) so
+#: `make_job("J60")` calls in different frames still hit; the stored cfg
+#: (strong ref, identity-checked — id() alone could alias a freed
+#: config's address) and the stored job's task list (contents-checked —
+#: two jobs can share name/size/deadline with different tasks) guard
+#: against false hits.
+_PLAN_CACHE: dict = {}
+_PLAN_CACHE_MAX = 64
+
+
+def _plan(job: Job, cfg: CloudConfig, pol: PolicyConfig,
+          ils: ILSParams, batched: BatchedILSParams | None,
+          engine: str | None = None) -> PrimaryPlan:
+    key = (id(cfg), job.name, job.n_tasks, job.deadline_s, pol,
+           dataclasses.astuple(ils), batched, engine)
+    hit = _PLAN_CACHE.get(key)
+    if hit is not None and hit[0] is cfg and \
+            (hit[1] is job or hit[1].tasks == job.tasks):
+        return hit[2]
+    plan = build_primary_map(job, cfg, pol, ils, engine=engine,
+                             batched_params=batched)
+    if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+        _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+    _PLAN_CACHE[key] = (cfg, job, plan)
+    return plan
+
+
+def _scalar_stats(x: float) -> dict:
+    return {"mean": float(x), "std": 0.0, "ci95": 0.0, "p95": float(x)}
+
+
+def _from_des(job: Job, pol: PolicyConfig, res: SimResult) -> Result:
+    return Result(job=job.name, policy=pol.name, process=res.scenario,
+                  backend="des", s=1, dt=None,
+                  cost=_scalar_stats(res.cost),
+                  makespan=_scalar_stats(res.makespan),
+                  deadline_met_frac=float(res.deadline_met),
+                  unfinished_frac=float(res.unfinished > 0),
+                  mean_hibernations=float(res.n_hibernations),
+                  mean_resumes=float(res.n_resumes), raw=res)
+
+
+def _from_mc(job: Job, backend: str, res: MCResult,
+             process: str | None = None, sl: slice = slice(None),
+             raw: Any = None) -> Result:
+    cost, mkp = res.cost[sl], res.makespan[sl]
+    return Result(job=job.name, policy=res.policy,
+                  process=process or res.scenario, backend=backend,
+                  s=len(cost), dt=res.dt, cost=dist_stats(cost),
+                  makespan=dist_stats(mkp),
+                  deadline_met_frac=float(np.mean(res.deadline_met[sl])),
+                  unfinished_frac=float(np.mean(res.unfinished[sl] > 0)),
+                  mean_hibernations=float(np.mean(res.n_hibernations[sl])),
+                  mean_resumes=float(np.mean(res.n_resumes[sl])), raw=raw)
+
+
+# ---------------------------------------------------------------------------
+# run / sweep
+# ---------------------------------------------------------------------------
+def run(exp: Experiment | None = None, **kw) -> Result:
+    """Execute one experiment; ``run(job="J60", policy="hads+burst",
+    process="sc5", backend="mc-adaptive")`` is shorthand for
+    ``run(Experiment(...))``."""
+    if exp is None:
+        exp = Experiment(**kw)
+    elif kw:
+        exp = dataclasses.replace(exp, **kw)
+    cfg = exp.cfg or _DEFAULT_CFG
+    job = make_job(exp.job) if isinstance(exp.job, str) else exp.job
+    pol = policy(exp.policy)
+    backend = _backend(exp.backend)
+    seed = exp.seed if exp.seed is not None else exp.mc.seed
+    mc = dataclasses.replace(
+        exp.mc, seed=seed,
+        stepping="slot" if backend == "mc-slot" else "adaptive")
+    ils = exp.ils or ILSParams(seed=seed)
+
+    if backend == "des":
+        plan = _plan(job, cfg, pol, ils, exp.batched_ils)
+        sim = Simulator(job, plan, cfg, scenario=_as_scenario(exp.process),
+                        seed=seed, keep_trace=exp.keep_trace)
+        return _from_des(job, pol, sim.run())
+    if backend in ("mc-slot", "mc-adaptive"):
+        plan = _plan(job, cfg, pol, ils, exp.batched_ils)
+        res = run_mc(job, plan, cfg, scenario=as_process(exp.process),
+                     params=mc)
+        return _from_mc(job, backend, res, raw=res)
+    return _fused_cells([job], [pol], {pol.name: [as_process(exp.process)]},
+                        cfg, mc, ils, exp.batched_ils, "fleet",
+                        plan_engine="batched")[0]
+
+
+def sweep(jobs, policies=("burst-hads",), processes=None,
+          backend: str = "mc-adaptive", cfg: CloudConfig | None = None,
+          mc: MCParams = MCParams(), ils: ILSParams | None = None,
+          batched_ils: BatchedILSParams | None = None,
+          seed: int | None = None,
+          plan_engine: str | None = None) -> list[Result]:
+    """Evaluate a jobs x policies x processes grid on one backend.
+
+    ``processes=None`` defaults each policy to its own Table V sweep
+    (``PolicyConfig.scenario_names()`` — on-demand maps only face the
+    event-free baseline).  On the MC and fleet backends each
+    (job, policy) cell runs as ONE fused engine call over all its
+    processes concatenated along the scenario axis (``sim.fleet``'s
+    concat-S trick); ``plan_engine`` overrides the planning search
+    (default: each policy's own ``planner`` axis, except the fleet
+    backend which plans batched like ``evaluate_fleet``).  Rows come
+    back in job → policy → process order regardless of fusion."""
+    jobs = [make_job(j) if isinstance(j, str) else j
+            for j in ([jobs] if isinstance(jobs, (str, Job)) else jobs)]
+    pols = [policy(p) for p in
+            ([policies] if isinstance(policies, (str, PolicyConfig))
+             else policies)]
+    backend = _backend(backend)
+    cfg = cfg or _DEFAULT_CFG
+    if seed is not None:
+        mc = dataclasses.replace(mc, seed=seed)
+    ils = ils or ILSParams(seed=mc.seed)
+    procs_of = {
+        p.name: [as_process(s) for s in
+                 (processes if processes is not None
+                  else p.scenario_names())]
+        for p in pols}
+
+    if backend == "des":
+        out = []
+        for job in jobs:
+            for pol in pols:
+                plan = _plan(job, cfg, pol, ils, batched_ils)
+                for proc in procs_of[pol.name]:
+                    sim = Simulator(job, plan, cfg,
+                                    scenario=_as_scenario(proc),
+                                    seed=mc.seed)
+                    out.append(_from_des(job, pol, sim.run()))
+        return out
+
+    mc = dataclasses.replace(
+        mc, stepping="slot" if backend == "mc-slot" else "adaptive")
+    if backend == "fleet" and plan_engine is None:
+        plan_engine = "batched"
+    return _fused_cells(jobs, pols, procs_of, cfg, mc, ils, batched_ils,
+                        backend, plan_engine)
+
+
+def _fused_cells(jobs, pols, procs_of, cfg, mc, ils, batched_ils, backend,
+                 plan_engine) -> list[Result]:
+    """One concat-S engine call per (job, policy) — the fleet pipeline's
+    fusion (DESIGN.md §2.4) behind the unified ``Result`` schema."""
+    from repro.sim.fleet import (sample_grid_events, scenario_sharding,
+                                 shard_events)
+    out = []
+    for job in jobs:
+        for pol in pols:
+            procs = procs_of[pol.name]
+            plan = _plan(job, cfg, pol, ils, batched_ils,
+                         engine=plan_engine)
+            evs = sample_grid_events(job, plan, procs, mc)
+            ev_all = shard_events(
+                EventTensor.concat(evs),
+                scenario_sharding(len(procs) * mc.n_scenarios))
+            res = run_mc_events(job, plan, cfg, ev_all, mc, label="sweep")
+            s = mc.n_scenarios
+            for i, proc in enumerate(procs):
+                out.append(_from_mc(job, backend, res, process=proc.name,
+                                    sl=slice(i * s, (i + 1) * s)))
+    return out

@@ -1,0 +1,25 @@
+"""Deprecation plumbing for the ``repro.api`` facade migration.
+
+The pre-facade convenience entry points (``sim.simulator.simulate``,
+``sim.mc_engine.simulate_mc``, ``sim.mc_engine.mc_sweep``) are kept as
+thin shims that delegate to ``repro.api`` and raise
+``ReproDeprecationWarning``.  Tier-1 escalates that warning to an error
+(``pytest.ini``) so internal code cannot regress onto the shims, and
+``scripts/check_docs.py`` fails when README or the examples call them.
+The engine-level primitives (``Simulator``, ``run_mc``,
+``run_mc_events``, ``evaluate_fleet``) are *not* deprecated — they are
+the substrate the facade routes through.
+"""
+from __future__ import annotations
+
+import warnings
+
+
+class ReproDeprecationWarning(DeprecationWarning):
+    """A pre-``repro.api`` entry point was called."""
+
+
+def warn_deprecated(old: str, new: str) -> None:
+    """Emit the standard shim warning, attributed to the shim's caller."""
+    warnings.warn(f"{old} is deprecated; use {new}",
+                  ReproDeprecationWarning, stacklevel=3)

@@ -6,3 +6,5 @@ from .fitness import evaluate, pack_solution, check_schedule  # noqa: F401
 from .greedy import initial_solution  # noqa: F401
 from .ils import ILSParams, ILSResult, run_ils  # noqa: F401
 from .burst_alloc import burst_allocation, BurstAllocation  # noqa: F401
+from .dynamic import (BURST_HADS, HADS, ILS_ONDEMAND, POLICIES,  # noqa: F401
+                      PolicyConfig, build_primary_map, make_policy, policy)

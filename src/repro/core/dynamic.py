@@ -1,21 +1,43 @@
-"""Dynamic Scheduling Module (§III-D) — policies + primary-map planning.
+"""Dynamic Scheduling Module (§III-D) — the policy *lattice* + planning.
 
-Three policies are implemented, matching the paper's §IV comparison:
+The paper's §IV comparison is an ablation over independent policy axes,
+not three monolithic frameworks.  ``PolicyConfig`` makes the axes
+first-class:
 
-* ``BURST_HADS`` — ILS primary map over spots + burstable allocation;
-  immediate checkpoint-rollback migration on hibernation (Alg. 4);
-  work-stealing on resume/idle (Alg. 5); AC termination policy.
-* ``HADS`` — the previous framework [1]: greedy cost-only primary map over
-  spots, no burstables, no work-stealing; hibernated VMs keep their tasks
-  frozen in place and migration is *postponed* to the latest safe instant
-  (HADS bets on the VM resuming to save money).
-* ``ILS_ONDEMAND`` — the ILS map built over regular on-demand VMs only;
-  no spot, so no hibernation events apply.
+* ``planner``       — how the primary map is built: ``"ils-exact"`` (the
+  paper's sequential ILS chain), ``"ils-batched"`` (the device-resident
+  population search, ``core.ils_jax``) or ``"greedy"`` (Alg. 2 cost-only
+  seed, the HADS baseline);
+* ``market``        — market of the primary map (spot maps hibernate,
+  on-demand maps do not);
+* ``burstables``    — Algorithm 1 part 2 burstable allocation;
+* ``hibernation``   — the response to a hibernation event:
+  ``"migrate"`` (immediate Alg. 4 checkpoint-rollback migration),
+  ``"defer"`` (HADS: tasks freeze in place and migration is postponed to
+  the latest safe instant — the framework bets on the VM resuming), or
+  ``"freeze"`` (tasks freeze in place *permanently*: the pure-optimist
+  ablation point that only ever progresses again on resume);
+* ``work_stealing`` — Algorithm 5 at AC boundaries / on resume.
+
+Every lattice point is registered in ``POLICIES`` under a canonical
+``planner+market+burst+hibernation+steal`` name and constructible from a
+compact spec via ``policy()`` — ``policy("hads+burst")`` is HADS with
+burstable allocation switched on.  The paper's three §IV frameworks are
+registry *aliases* with byte-identical behaviour to the pre-lattice
+configs (pinned by ``tests/data/des_golden.json`` and
+``tests/data/mc_golden.json``):
+
+* ``burst-hads``   = ils-exact + spot + burst + migrate + steal
+* ``hads``         = greedy + spot + noburst + defer + nosteal  [1]
+* ``ils-ondemand`` = ils-exact + ondemand + noburst
+
+[1] Teylo et al., *A Bag-of-Tasks Scheduler Tolerant to Temporal
+    Failures in Clouds*.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+import warnings
 
 from .burst_alloc import burst_allocation
 from .dspot import compute_dspot
@@ -23,16 +45,55 @@ from .greedy import initial_solution
 from .ils import ILSParams, run_ils
 from .types import CloudConfig, Job, Market, Solution
 
+#: planner axis — ``"ils-exact"`` | ``"ils-batched"`` | ``"greedy"``
+PLANNERS = ("ils-exact", "ils-batched", "greedy")
+#: hibernation-response axis — ``"migrate"`` | ``"defer"`` | ``"freeze"``
+HIBERNATION_MODES = ("migrate", "defer", "freeze")
+
+
+class ILSKnobsDiscardedWarning(UserWarning):
+    """The batched ILS engine has no equivalent for some ``ILSParams``
+    knobs; raised when a caller's non-default values are dropped."""
+
 
 @dataclasses.dataclass(frozen=True)
 class PolicyConfig:
+    """One point of the policy lattice (hashable — the MC engine's static
+    jit argument is derived from it via ``engine_view``)."""
+
     name: str
-    primary: str                 # "ils" | "greedy"
-    market: Market               # market of the primary map
-    use_burstables: bool         # Algorithm 1 part 2
-    immediate_migration: bool    # True: Alg. 4 on hibernate; False: deferred
-    work_stealing: bool          # Algorithm 5
-    freeze_in_place: bool        # hibernation preserves task memory (HADS)
+    planner: str = "ils-exact"
+    market: Market = Market.SPOT
+    burstables: bool = False
+    hibernation: str = "migrate"
+    work_stealing: bool = False
+
+    # -- derived views consumed by the engines (the pre-lattice flags) --
+    @property
+    def primary(self) -> str:
+        """``"ils"`` | ``"greedy"`` — the map-construction family."""
+        return "greedy" if self.planner == "greedy" else "ils"
+
+    @property
+    def use_burstables(self) -> bool:
+        return self.burstables
+
+    @property
+    def immediate_migration(self) -> bool:
+        """Alg. 4 fires at the hibernation event itself."""
+        return self.hibernation == "migrate"
+
+    @property
+    def freeze_in_place(self) -> bool:
+        """Hibernation preserves task memory (EC2 hibernate semantics);
+        progress is exact across the outage instead of checkpoint-floor."""
+        return self.hibernation in ("defer", "freeze")
+
+    @property
+    def deferred_migration(self) -> bool:
+        """Frozen bags migrate at the latest deadline-safe instant
+        (HADS); under ``"freeze"`` they never migrate at all."""
+        return self.hibernation == "defer"
 
     @property
     def hibernatable(self) -> bool:
@@ -47,19 +108,163 @@ class PolicyConfig:
             return ("none",)
         return ("none", "sc1", "sc2", "sc3", "sc4", "sc5")
 
+    def engine_view(self) -> "PolicyConfig":
+        """The dynamic engines branch only on (burstables, hibernation,
+        work_stealing) — collapse onto a canonical representative so the
+        ~50 registry policies share ~12 MC-engine compilations instead of
+        keying the jit cache on name/planner/market."""
+        return _engine_view(self.burstables, self.hibernation,
+                            self.work_stealing)
 
-BURST_HADS = PolicyConfig("burst-hads", primary="ils", market=Market.SPOT,
-                          use_burstables=True, immediate_migration=True,
-                          work_stealing=True, freeze_in_place=False)
-HADS = PolicyConfig("hads", primary="greedy", market=Market.SPOT,
-                    use_burstables=False, immediate_migration=False,
-                    work_stealing=False, freeze_in_place=True)
-ILS_ONDEMAND = PolicyConfig("ils-ondemand", primary="ils",
-                            market=Market.ONDEMAND, use_burstables=False,
-                            immediate_migration=True, work_stealing=False,
-                            freeze_in_place=False)
 
-POLICIES = {p.name: p for p in (BURST_HADS, HADS, ILS_ONDEMAND)}
+def _axes_of(p: PolicyConfig) -> tuple:
+    return (p.planner, p.market, p.burstables, p.hibernation,
+            p.work_stealing)
+
+
+def canonical_name(planner: str, market: Market, burstables: bool,
+                   hibernation: str, work_stealing: bool) -> str:
+    """Canonical registry key of a lattice point, e.g.
+    ``"ils-exact+spot+burst+migrate+steal"``."""
+    return "+".join((planner, market.value,
+                     "burst" if burstables else "noburst", hibernation,
+                     "steal" if work_stealing else "nosteal"))
+
+
+def make_policy(planner: str = "ils-exact", market: Market = Market.SPOT,
+                burstables: bool = False, hibernation: str = "migrate",
+                work_stealing: bool = False,
+                name: str | None = None) -> PolicyConfig:
+    """Validate + canonicalize one lattice point.
+
+    On-demand maps never hibernate, so their ``hibernation`` axis is
+    degenerate — it is canonicalized to ``"migrate"`` (identical
+    behaviour, one registry point instead of three).  If the resulting
+    axes are already registered, the registry instance is returned (one
+    object per lattice point keeps the jit cache tight); ``name`` forces
+    a fresh instance under that name.
+    """
+    if planner not in PLANNERS:
+        raise ValueError(f"unknown planner {planner!r} (one of {PLANNERS})")
+    if hibernation not in HIBERNATION_MODES:
+        raise ValueError(f"unknown hibernation mode {hibernation!r} "
+                         f"(one of {HIBERNATION_MODES})")
+    market = Market(market)
+    if market == Market.ONDEMAND:
+        hibernation = "migrate"
+    axes = (planner, market, burstables, hibernation, work_stealing)
+    if name is None:
+        hit = _BY_AXES.get(axes)
+        if hit is not None:
+            return hit
+        name = canonical_name(*axes)
+    return PolicyConfig(name, planner=planner, market=market,
+                        burstables=burstables, hibernation=hibernation,
+                        work_stealing=work_stealing)
+
+
+# --- the paper's three §IV frameworks, as lattice aliases ----------------
+BURST_HADS = PolicyConfig("burst-hads", planner="ils-exact",
+                          market=Market.SPOT, burstables=True,
+                          hibernation="migrate", work_stealing=True)
+HADS = PolicyConfig("hads", planner="greedy", market=Market.SPOT,
+                    burstables=False, hibernation="defer",
+                    work_stealing=False)
+ILS_ONDEMAND = PolicyConfig("ils-ondemand", planner="ils-exact",
+                            market=Market.ONDEMAND, burstables=False,
+                            hibernation="migrate", work_stealing=False)
+
+#: name -> PolicyConfig: the three aliases + every canonical lattice
+#: point (spot x 3 planners x 2 burst x 3 hibernation x 2 steal, plus
+#: the on-demand points with their degenerate hibernation axis).
+POLICIES: dict[str, PolicyConfig] = {}
+#: axes -> the single registry instance carrying them
+_BY_AXES: dict[tuple, PolicyConfig] = {}
+
+for _alias in (BURST_HADS, HADS, ILS_ONDEMAND):
+    POLICIES[_alias.name] = _alias
+    _BY_AXES[_axes_of(_alias)] = _alias
+
+for _pl in PLANNERS:
+    for _mk in (Market.SPOT, Market.ONDEMAND):
+        for _bu in (False, True):
+            for _hb in (HIBERNATION_MODES if _mk == Market.SPOT
+                        else ("migrate",)):
+                for _ws in (False, True):
+                    _axes = (_pl, _mk, _bu, _hb, _ws)
+                    _p = _BY_AXES.get(_axes) or PolicyConfig(
+                        canonical_name(*_axes), planner=_pl, market=_mk,
+                        burstables=_bu, hibernation=_hb, work_stealing=_ws)
+                    _BY_AXES.setdefault(_axes, _p)
+                    POLICIES[canonical_name(*_axes)] = _p
+
+#: ``policy()`` modifier vocabulary: token -> (axis, value)
+_TOKENS: dict[str, tuple[str, object]] = {
+    "ils": ("planner", "ils-exact"),
+    "ils-exact": ("planner", "ils-exact"),
+    "ils-batched": ("planner", "ils-batched"),
+    "greedy": ("planner", "greedy"),
+    "spot": ("market", Market.SPOT),
+    "ondemand": ("market", Market.ONDEMAND),
+    "od": ("market", Market.ONDEMAND),
+    "burst": ("burstables", True),
+    "noburst": ("burstables", False),
+    "migrate": ("hibernation", "migrate"),
+    "defer": ("hibernation", "defer"),
+    "freeze": ("hibernation", "freeze"),
+    "steal": ("work_stealing", True),
+    "nosteal": ("work_stealing", False),
+}
+
+
+def policy(spec: "str | PolicyConfig") -> PolicyConfig:
+    """Resolve a policy spec: a ``PolicyConfig`` (returned as-is), a
+    registry name (``"burst-hads"``, a canonical lattice name), or a
+    ``"+"``-joined compositional spec.
+
+    A compositional spec starts from a base and applies modifiers left to
+    right: ``"hads+burst"`` is the HADS alias with burstable allocation
+    on, ``"burst-hads+nosteal"`` is Burst-HADS without Alg. 5.  If the
+    first token is not a registered name the defaults (ils-exact, spot,
+    noburst, migrate, nosteal) are the base, so a bare axes spec like
+    ``"greedy+spot+burst+freeze+steal"`` also resolves.  The result is
+    always the single registry instance for those axes.
+    """
+    if isinstance(spec, PolicyConfig):
+        return spec
+    if not isinstance(spec, str):
+        raise TypeError(f"cannot interpret {type(spec).__name__} as a "
+                        "policy spec")
+    if spec in POLICIES:
+        return POLICIES[spec]
+    tokens = [t.strip() for t in spec.split("+") if t.strip()]
+    if not tokens:
+        raise ValueError("empty policy spec")
+    axes = {"planner": "ils-exact", "market": Market.SPOT,
+            "burstables": False, "hibernation": "migrate",
+            "work_stealing": False}
+    if tokens[0] in POLICIES:
+        base = POLICIES[tokens[0]]
+        axes = {"planner": base.planner, "market": base.market,
+                "burstables": base.burstables,
+                "hibernation": base.hibernation,
+                "work_stealing": base.work_stealing}
+        tokens = tokens[1:]
+    for tok in tokens:
+        if tok not in _TOKENS:
+            raise ValueError(
+                f"unknown policy token {tok!r} in spec {spec!r}; "
+                f"vocabulary: {sorted(_TOKENS)} or a registered name "
+                f"from POLICIES")
+        axis, value = _TOKENS[tok]
+        axes[axis] = value
+    return make_policy(**axes)
+
+
+def _engine_view(burstables: bool, hibernation: str,
+                 work_stealing: bool) -> PolicyConfig:
+    return POLICIES[canonical_name("ils-exact", Market.SPOT, burstables,
+                                   hibernation, work_stealing)]
 
 
 @dataclasses.dataclass
@@ -69,9 +274,33 @@ class PrimaryPlan:
     policy: PolicyConfig
 
 
+#: ILSParams knobs with no batched-search equivalent, checked against
+#: their defaults when the hand-off has to discard them.
+_BATCHED_DROPPED = ("max_attempt", "swap_rate", "max_failed", "relax_rate")
+
+
+def _batched_params_from(params: ILSParams):
+    """Derive ``BatchedILSParams`` from sequential-ILS knobs, warning when
+    explicitly-set knobs have no batched equivalent and are discarded."""
+    from .ils_jax import BatchedILSParams
+    defaults = ILSParams()
+    dropped = [k for k in _BATCHED_DROPPED
+               if getattr(params, k) != getattr(defaults, k)]
+    if dropped:
+        warnings.warn(
+            f"build_primary_map(engine='batched'): ILSParams knobs "
+            f"{dropped} have no batched-search equivalent and are "
+            f"discarded — pass batched_params=BatchedILSParams(...) to "
+            f"control the population search explicitly",
+            ILSKnobsDiscardedWarning, stacklevel=3)
+    return BatchedILSParams(iterations=params.max_iteration,
+                            alpha=params.alpha, seed=params.seed)
+
+
 def build_primary_map(job: Job, cfg: CloudConfig, policy: PolicyConfig,
                       params: ILSParams = ILSParams(),
-                      engine: str = "exact") -> PrimaryPlan:
+                      engine: str | None = None,
+                      batched_params=None) -> PrimaryPlan:
     """Algorithm 1 end-to-end for the chosen policy.
 
     ``engine`` selects the ILS search backing the primary map:
@@ -79,16 +308,18 @@ def build_primary_map(job: Job, cfg: CloudConfig, policy: PolicyConfig,
     packer fitness); ``"batched"`` hands off to the device-resident
     population search (``core.ils_jax.run_batched_ils``) — the static
     phase the fleet pipeline (``sim.fleet``) uses so the whole
-    plan→distribution flow stays on device.  Both return the same
+    plan→distribution flow stays on device.  ``None`` (default) follows
+    ``policy.planner`` — the lattice's own axis.  Both return the same
     ``PrimaryPlan`` shape; burstable allocation and D_spot are shared.
 
     The two searches have different knob sets: under ``"batched"`` only
     ``max_iteration`` (→ iterations), ``alpha`` and ``seed`` carry over
     from ``params``; ``max_attempt``/``swap_rate``/``max_failed``/
-    ``relax_rate`` have no batched equivalent and population/proposal
-    sizes use the ``BatchedILSParams`` defaults — construct
-    ``core.ils_jax.BatchedILSParams`` and call ``run_batched_ils``
-    directly to control them.
+    ``relax_rate`` have no batched equivalent (an
+    ``ILSKnobsDiscardedWarning`` fires when non-default values are
+    dropped).  Pass ``batched_params`` (a
+    ``core.ils_jax.BatchedILSParams``) to control population/proposal
+    sizes explicitly — it takes precedence over the derived hand-off.
     """
     pool = cfg.instance_pool()
     if policy.market == Market.SPOT:
@@ -96,11 +327,14 @@ def build_primary_map(job: Job, cfg: CloudConfig, policy: PolicyConfig,
     else:
         dspot = job.deadline_s  # on-demand VMs don't hibernate
 
+    if engine is None:
+        engine = "batched" if policy.planner == "ils-batched" else "exact"
+
     if policy.primary == "ils":
         if engine == "batched":
-            from .ils_jax import BatchedILSParams, run_batched_ils
-            bp = BatchedILSParams(iterations=params.max_iteration,
-                                  alpha=params.alpha, seed=params.seed)
+            from .ils_jax import run_batched_ils
+            bp = batched_params if batched_params is not None \
+                else _batched_params_from(params)
             sol = run_batched_ils(job.tasks, pool, cfg, dspot,
                                   job.deadline_s, bp,
                                   market=policy.market).solution

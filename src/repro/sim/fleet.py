@@ -24,7 +24,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
-from repro.core.dynamic import POLICIES, build_primary_map
+from repro.core.dynamic import build_primary_map, policy as resolve_policy
 from repro.core.ils import ILSParams
 from repro.core.types import CloudConfig, Job
 from .market import EventTensor, as_process
@@ -125,22 +125,26 @@ def evaluate_fleet(jobs, policies, processes,
                    cfg: CloudConfig | None = None,
                    params: MCParams = MCParams(n_scenarios=64),
                    ils_params: ILSParams | None = None,
-                   plan_engine: str = "batched",
+                   plan_engine: str | None = "batched",
+                   batched_ils=None,
                    shard: bool = True) -> FleetResult:
     """Evaluate every (job, policy, market process) cell of the grid.
 
     ``jobs``: Job objects or names (``make_job``); ``policies``:
-    PolicyConfig or names from ``core.dynamic.POLICIES``; ``processes``:
-    MarketProcess / Table V Scenario / scenario names.  Per (job, policy)
-    the static map is planned once (``plan_engine``: "batched" =
-    ``run_batched_ils`` hand-off, "exact" = the paper's sequential chain)
-    and all processes run as one concatenated, scenario-sharded engine
-    call.  Returns one row per cell with cost/makespan distribution
-    summaries and deadline-met fractions.
+    PolicyConfig, registry names, or lattice specs (``core.dynamic
+    .policy`` — ``"hads+burst"`` works); ``processes``: MarketProcess /
+    Table V Scenario / scenario names.  Per (job, policy) the static map
+    is planned once (``plan_engine``: "batched" = ``run_batched_ils``
+    hand-off with an optional ``batched_ils`` knob passthrough, "exact"
+    = the paper's sequential chain, None = each policy's own ``planner``
+    axis) and all processes run as one concatenated, scenario-sharded
+    engine call.  Returns one row per cell with cost/makespan
+    distribution summaries and deadline-met fractions.  The declarative
+    front-end over this pipeline is ``repro.api.sweep``.
     """
     cfg = cfg or CloudConfig()
     jobs = [make_job(j) if isinstance(j, str) else j for j in jobs]
-    policies = [POLICIES[p] if isinstance(p, str) else p for p in policies]
+    policies = [resolve_policy(p) for p in policies]
     processes = [as_process(p) for p in processes]
     if not (jobs and policies and processes):
         raise ValueError("evaluate_fleet needs ≥1 job, policy and process")
@@ -156,7 +160,8 @@ def evaluate_fleet(jobs, policies, processes,
         for policy in policies:
             t0 = time.perf_counter()
             plan = build_primary_map(job, cfg, policy, ils_params,
-                                     engine=plan_engine)
+                                     engine=plan_engine,
+                                     batched_params=batched_ils)
             plan_wall += time.perf_counter() - t0
             evs = sample_grid_events(job, plan, processes, params)
             ev_all = shard_events(EventTensor.concat(evs), sharding)

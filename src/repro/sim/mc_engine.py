@@ -25,12 +25,17 @@ implementing vectorized equivalents of the paper's dynamic module:
     steal the largest remaining task from the most-queued column's tail;
   * **AC termination** — idle non-burstable columns terminate at the AC
     boundary (after the stealing attempt), ending their billing;
-  * **deferred-HADS migration** — under ``freeze_in_place`` policies frozen
-    tasks stay on the hibernated column until the latest safe instant, then
-    migrate to on-demand capacity.
+  * **deferred-HADS migration** — under ``hibernation="defer"`` policies
+    frozen tasks stay on the hibernated column until the latest safe
+    instant, then migrate to on-demand capacity (``"freeze"`` policies
+    skip the fire entirely — frozen tasks only ever resume in place).
 
 Policy behaviour mirrors ``core.dynamic.PolicyConfig`` flags exactly; the
-config object itself is the (hashable) static jit argument.  The per-slot
+policy's ``engine_view()`` — its projection onto the axes the engine
+actually branches on — is the (hashable) static jit argument, so the
+whole ~48-point lattice (DESIGN.md §2.6) shares ≤12 engine builds per
+shape (the declarative front-end over this module is ``repro.api``).
+The per-slot
 hot reduction — per-scenario per-VM remaining load / unfinished count /
 max remaining task — is the ``mc_vm_stats`` Pallas kernel
 (``kernels/sched_fitness/mc_step.py``) on accelerators and a shared
@@ -550,7 +555,8 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
                 m_cred = jnp.full(s, BIG, jnp.float32)
             # (6) deferred-HADS fire instant — frozen columns' max
             # remaining work is span-invariant, so t_safe is a fixed time
-            if policy.freeze_in_place:
+            # (pure-freeze policies never fire: resume is their only out)
+            if policy.deferred_migration:
                 maxw0 = jnp.max(ohp * rem[:, :, None], axis=1)
                 t_safe0 = sc["deadline"] - (
                     sc["omega"] + maxw0 / sc["od_speed"] + sc["restore"]
@@ -588,7 +594,7 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
                 # m_fire bound above could reuse maxw0 only because it
                 # reads already-hibernated, hence frozen, columns)
                 maxw = jnp.max(ohp * rem[:, :, None], axis=1) \
-                    if policy.freeze_in_place else None
+                    if policy.deferred_migration else None
             billed = billed + mf[:, None] * dt * live01 * gate[:, None]
             credits = credits.at[:, bi].set(jnp.where(
                 act_b, jnp.clip(c0 + mf[:, None] * r_c, 0.0, cap), c0))
@@ -602,7 +608,7 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
             _, cnt, maxw = mc_vm_stats(assign, rem, v=v, interpret=interpret)
         else:
             maxw = jnp.max(ohp * rem[:, :, None], axis=1) \
-                if policy.freeze_in_place else None
+                if policy.deferred_migration else None
 
         # ================================================================
         # Full step at slot i (per-scenario) — under "slot" stepping
@@ -692,10 +698,11 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
         nres = nres + jnp.sum(res, axis=1)
         vstate = jnp.where(res, VM_ACTIVE, vstate)
 
-        if policy.freeze_in_place:
+        if policy.deferred_migration:
             # deferred-HADS migration at the latest safe instant
             # (conservative single-wave estimate on the slowest on-demand
-            # type, mirroring Simulator._hads_latest_safe_time)
+            # type, mirroring Simulator._hads_latest_safe_time); under
+            # hibernation="freeze" tasks stay frozen until resume instead
             t_safe = sc["deadline"] - (sc["omega"] + maxw / sc["od_speed"]
                                        + sc["restore"] + sc["margin"])
             fire = (vstate == VM_HIBERNATED) & (cnt > 0.5) & \
@@ -888,7 +895,9 @@ def run_mc_events(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
         else not on_cpu
     interpret = params.interpret if params.interpret is not None else on_cpu
     out = _mc_jit(donate and not on_cpu)(
-        arr, sc, ev, s=ev.n_scenarios, policy=plan.policy,
+        # static key: the engine branches only on the dynamics axes, so
+        # same-dynamics lattice policies share one compilation
+        arr, sc, ev, s=ev.n_scenarios, policy=plan.policy.engine_view(),
         steal_rounds=params.steal_rounds,
         mig_rounds=params.mig_rounds, mem_safe=mem_safe,
         use_kernel=use_kernel, interpret=interpret,
@@ -937,27 +946,35 @@ def simulate_mc(job: Job, cfg: CloudConfig,
                 scenario: Scenario | MarketProcess | str = SC_NONE,
                 params: MCParams = MCParams(),
                 ils_params: ILSParams | None = None) -> MCResult:
-    """Plan (Algorithm 1) once, then Monte-Carlo the dynamic phase."""
-    ils_params = ils_params or ILSParams(seed=params.seed)
-    plan = build_primary_map(job, cfg, policy, ils_params)
-    return run_mc(job, plan, cfg, scenario=scenario, params=params)
+    """Deprecated shim — plan + Monte-Carlo in one call.
+
+    Use ``repro.api.run(job=..., policy=..., process=..., backend=
+    "mc-adaptive")`` instead; this wrapper delegates there (sharing the
+    facade's cross-backend plan cache) and returns the raw ``MCResult``.
+    """
+    from repro.api import run as _api_run
+    from repro.compat import warn_deprecated
+    warn_deprecated("sim.mc_engine.simulate_mc", "repro.api.run")
+    backend = "mc-slot" if params.stepping == "slot" else "mc-adaptive"
+    return _api_run(job=job, policy=policy, process=scenario,
+                    backend=backend, cfg=cfg, mc=params,
+                    ils=ils_params).raw
 
 
 def mc_sweep(job: Job, cfg: CloudConfig, policies, scenarios=None,
              params: MCParams = MCParams(),
              ils_params: ILSParams | None = None) -> list[dict]:
-    """Summaries for each (policy, market process) pair — one plan per
-    policy, one batched MC run per process.  ``scenarios`` entries may be
-    Table V names, ``Scenario`` objects, or any ``market.MarketProcess``;
-    default is each policy's own Table V sweep."""
-    ils_params = ils_params or ILSParams(seed=params.seed)
-    rows = []
-    for policy in policies:
-        plan = build_primary_map(job, cfg, policy, ils_params)
-        specs = scenarios if scenarios is not None else \
-            policy.scenario_names()
-        for spec in specs:
-            res = run_mc(job, plan, cfg, scenario=as_process(spec),
-                         params=params)
-            rows.append(res.summary())
-    return rows
+    """Deprecated shim — per-(policy, process) distribution summaries.
+
+    Use ``repro.api.sweep`` instead; this wrapper delegates there, which
+    routes the grid through the fleet pipeline's concat-S fusion (one
+    engine call per (job, policy) instead of one per cell) and maps the
+    unified ``Result`` rows back onto the legacy row schema."""
+    from repro.api import sweep as _api_sweep
+    from repro.compat import warn_deprecated
+    warn_deprecated("sim.mc_engine.mc_sweep", "repro.api.sweep")
+    backend = "mc-slot" if params.stepping == "slot" else "mc-adaptive"
+    results = _api_sweep(jobs=[job], policies=list(policies),
+                         processes=scenarios, backend=backend, cfg=cfg,
+                         mc=params, ils=ils_params)
+    return [r.legacy_summary() for r in results]

@@ -258,7 +258,7 @@ class Simulator:
                  f"frozen={len(vmrt.frozen)}")
         if self.policy.immediate_migration:
             self._migrate(affected, self.policy.use_burstables)
-        elif vmrt.frozen:
+        elif self.policy.deferred_migration and vmrt.frozen:
             t_safe = self._hads_latest_safe_time(vmrt)
             if t_safe <= self.now:
                 self._hads_migrate(vmrt)
@@ -266,6 +266,8 @@ class Simulator:
                 self.events.push(t_safe, EventKind.DEFERRED_MIGRATION,
                                  uid=vmrt.vm.uid, gen=vmrt.n_hibernations)
                 self.log(f"defer migration of {vmrt.vm.name} to {t_safe:.0f}")
+        # hibernation="freeze": tasks stay frozen on the column and only
+        # ever progress again on resume — the pure-optimist lattice point
 
     def _hads_latest_safe_time(self, vmrt: VMRuntime) -> float:
         """Latest instant at which migrating the frozen bag still meets D.
@@ -384,9 +386,15 @@ def simulate(job: Job, cfg: CloudConfig, policy: PolicyConfig = BURST_HADS,
              scenario: Scenario = SC_NONE, seed: int = 0,
              params: ILSParams | None = None,
              keep_trace: bool = False) -> SimResult:
-    """Plan (Algorithm 1) + simulate one run."""
-    params = params or ILSParams(seed=seed)
-    plan = build_primary_map(job, cfg, policy, params)
-    sim = Simulator(job, plan, cfg, scenario=scenario, seed=seed,
-                    keep_trace=keep_trace)
-    return sim.run()
+    """Deprecated shim — plan (Algorithm 1) + simulate one DES trace.
+
+    Use ``repro.api.run(job=..., policy=..., process=...,
+    backend="des")`` instead; this wrapper delegates there (sharing the
+    facade's cross-backend plan cache) and returns the raw ``SimResult``.
+    """
+    from repro.api import run as _api_run
+    from repro.compat import warn_deprecated
+    warn_deprecated("sim.simulator.simulate", "repro.api.run")
+    return _api_run(job=job, policy=policy, process=scenario,
+                    backend="des", cfg=cfg, seed=seed, ils=params,
+                    keep_trace=keep_trace).raw

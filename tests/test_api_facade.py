@@ -1,0 +1,170 @@
+"""``repro.api`` facade: surface snapshot, deprecation shims, unified
+result schema across every backend, fused-sweep correctness, and the
+cross-backend plan cache."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.compat import ReproDeprecationWarning
+from repro.core.ils import ILSParams
+from repro.core.ils_jax import BatchedILSParams
+from repro.core.types import CloudConfig
+from repro.sim.events import SCENARIOS
+from repro.sim.mc_engine import MCParams, mc_sweep, simulate_mc
+from repro.sim.simulator import simulate
+from repro.sim.workloads import make_job
+
+CFG = CloudConfig()
+FAST = ILSParams(max_iteration=6, max_attempt=6, seed=3)
+BFAST = BatchedILSParams(iterations=6, seed=3)
+MC = MCParams(n_scenarios=4, dt=30.0, seed=1)
+
+#: the pinned public surface — extending it is a conscious API decision
+API_SURFACE = ["BACKENDS", "BatchedILSParams", "CloudConfig", "Experiment",
+               "ILSParams", "MCParams", "POLICIES", "Result", "make_job",
+               "make_policy", "policy", "run", "sweep"]
+
+#: unified row schema every backend must produce
+ROW_KEYS = {"job", "policy", "process", "backend", "s", "dt", "cost",
+            "makespan", "deadline_met_frac", "unfinished_frac",
+            "mean_hibernations", "mean_resumes"}
+
+#: new lattice points (beyond the paper's three aliases) exercised
+#: end-to-end on every backend — the ISSUE 5 acceptance grid
+NEW_POLICIES = ("burst-hads+nosteal", "hads+burst", "hads+steal",
+                "burst-hads+freeze")
+
+
+def test_api_surface_snapshot():
+    assert sorted(api.__all__) == API_SURFACE
+    for name in api.__all__:
+        assert hasattr(api, name), name
+
+
+def test_old_entry_points_are_deprecated_shims():
+    """The legacy one-shot wrappers warn and still return their legacy
+    result types (the shims delegate to the facade)."""
+    job = make_job("J8")
+    with pytest.warns(ReproDeprecationWarning, match="repro.api.run"):
+        r = simulate(job, CFG, scenario=SCENARIOS["none"], seed=0,
+                     params=FAST)
+    assert r.unfinished == 0 and r.cost > 0
+    with pytest.warns(ReproDeprecationWarning, match="repro.api.run"):
+        m = simulate_mc(job, CFG, scenario="none",
+                        params=MCParams(n_scenarios=2, dt=30.0, seed=0),
+                        ils_params=FAST)
+    assert m.n == 2 and (m.unfinished == 0).all()
+    with pytest.warns(ReproDeprecationWarning, match="repro.api.sweep"):
+        rows = mc_sweep(job, CFG, [api.policy("burst-hads")],
+                        scenarios=["none"],
+                        params=MCParams(n_scenarios=2, dt=30.0, seed=0),
+                        ils_params=FAST)
+    # the legacy row schema survives the fused-fleet routing
+    assert sorted(rows[0]) == ["cost", "deadline_met_frac", "makespan",
+                               "mean_hibernations", "mean_resumes", "n",
+                               "policy", "scenario"]
+    assert rows[0]["n"] == 2 and rows[0]["scenario"] == "none"
+
+
+@pytest.mark.parametrize("name", NEW_POLICIES)
+def test_new_lattice_policies_run_on_every_backend(name):
+    """≥4 beyond-paper lattice points run end-to-end through the facade
+    on all backends with one unified row schema."""
+    rows = []
+    for backend in api.BACKENDS:
+        res = api.run(job="J8", policy=name, process="sc5",
+                      backend=backend, cfg=CFG, mc=MC, ils=FAST,
+                      batched_ils=BFAST, seed=1)
+        row = res.row()
+        assert set(row) == ROW_KEYS, (backend, set(row) ^ ROW_KEYS)
+        assert row["backend"] == backend and row["job"] == "J8"
+        assert row["cost"]["mean"] > 0 and row["makespan"]["mean"] > 0
+        assert 0.0 <= row["deadline_met_frac"] <= 1.0
+        assert row["s"] == (1 if backend == "des" else MC.n_scenarios)
+        assert (row["dt"] is None) == (backend == "des")
+        rows.append(res)
+    # the resolved lattice policy is reported under its canonical name
+    assert len({r.policy for r in rows}) == 1
+    assert rows[0].policy == api.policy(name).name
+
+
+def test_fused_sweep_matches_per_cell_runs():
+    """sweep() fuses all processes of a (job, policy) cell into one
+    engine call — on the event-free scenario the result must equal the
+    standalone per-cell run exactly (no RNG enters the engine)."""
+    res = api.sweep("J8", ["burst-hads", "hads+burst"],
+                    processes=["none"], backend="mc-adaptive", cfg=CFG,
+                    mc=MC, ils=FAST)
+    assert [(r.policy, r.process) for r in res] == \
+        [("burst-hads", "none"), (api.policy("hads+burst").name, "none")]
+    for r in res:
+        solo = api.run(job="J8", policy=r.policy, process="none",
+                       backend="mc-adaptive", cfg=CFG, mc=MC, ils=FAST)
+        np.testing.assert_allclose(r.cost["mean"], solo.cost["mean"],
+                                   rtol=1e-6)
+        np.testing.assert_allclose(r.makespan["mean"],
+                                   solo.makespan["mean"], rtol=1e-6)
+
+
+def test_sweep_default_processes_follow_policy():
+    """processes=None -> each policy's own Table V sweep; on-demand maps
+    only face the event-free baseline; rows keep grid order."""
+    res = api.sweep("J8", ["burst-hads", "ils-ondemand"],
+                    backend="mc-adaptive", cfg=CFG,
+                    mc=MCParams(n_scenarios=2, dt=30.0, seed=0), ils=FAST)
+    by_pol = {}
+    for r in res:
+        by_pol.setdefault(r.policy, []).append(r.process)
+    assert by_pol["burst-hads"] == ["none", "sc1", "sc2", "sc3", "sc4",
+                                    "sc5"]
+    assert by_pol["ils-ondemand"] == ["none"]
+
+
+def test_des_sweep_loops_exact_traces():
+    """The DES backend sweeps a grid as one exact trace per cell, with
+    the same unified row schema (degenerate distributions)."""
+    res = api.sweep("J8", ["burst-hads", "hads+burst"],
+                    processes=["none"], backend="des", cfg=CFG,
+                    mc=MCParams(n_scenarios=4, dt=30.0, seed=0), ils=FAST)
+    assert [r.backend for r in res] == ["des", "des"]
+    for r in res:
+        assert set(r.row()) == ROW_KEYS
+        assert r.s == 1 and r.dt is None
+        assert r.cost["std"] == 0.0 and r.cost["p95"] == r.cost["mean"]
+        assert r.unfinished_frac == 0.0
+
+
+def test_des_backend_rejects_non_poisson_processes():
+    from repro.sim.market import WeibullProcess
+    with pytest.raises(TypeError, match="backend='des'"):
+        api.run(job="J8", policy="burst-hads", backend="des", cfg=CFG,
+                ils=FAST,
+                process=WeibullProcess(shape_h=0.7, scale_h=900.0))
+    with pytest.raises(ValueError, match="unknown backend"):
+        api.run(job="J8", backend="warp", cfg=CFG)
+
+
+def test_plan_cache_shared_across_backends():
+    """Running the same cell on the DES and then on MC plans once."""
+    job = make_job("J8")
+    pol = api.policy("burst-hads")
+    a = api._plan(job, CFG, pol, FAST, None)
+    b = api._plan(job, CFG, pol, FAST, None)
+    assert a is b
+    # a make_job() re-creation of the same workload still hits
+    c = api._plan(make_job("J8"), CFG, pol, FAST, None)
+    assert a is c
+    # different ILS knobs miss
+    d = api._plan(job, CFG, pol, ILSParams(max_iteration=5, seed=3), None)
+    assert d is not a
+
+
+def test_experiment_spec_roundtrip():
+    exp = api.Experiment(job="J8", policy="hads+burst", process="sc5",
+                         backend="mc-adaptive", cfg=CFG, mc=MC, ils=FAST)
+    r1 = api.run(exp)
+    r2 = api.run(exp, backend="mc-slot")     # kwargs override the spec
+    assert r1.backend == "mc-adaptive" and r2.backend == "mc-slot"
+    assert dataclasses.asdict(exp)["backend"] == "mc-adaptive"

@@ -17,6 +17,7 @@ import pytest
 
 from repro.core.dynamic import BURST_HADS, HADS, build_primary_map
 from repro.core.ils import ILSParams
+from repro.core.ils_jax import BatchedILSParams
 from repro.core.types import CloudConfig
 from repro.sim.fleet import evaluate_fleet, sample_grid_events
 from repro.sim.market import WeibullProcess, as_process
@@ -25,6 +26,9 @@ from repro.sim.workloads import make_job
 
 CFG = CloudConfig()
 FAST = ILSParams(max_iteration=8, max_attempt=8, seed=3)
+#: explicit batched knobs (the same values the ILSParams hand-off
+#: derives) so the grid plans identically without the discard warning
+BFAST = BatchedILSParams(iterations=8, seed=3)
 PARAMS = MCParams(n_scenarios=8, dt=30.0, seed=5)
 PROCS = ["sc5", WeibullProcess(shape_h=0.7, scale_h=900.0, name="wb")]
 
@@ -33,7 +37,7 @@ PROCS = ["sc5", WeibullProcess(shape_h=0.7, scale_h=900.0, name="wb")]
 def fleet_result():
     return evaluate_fleet(["J12", "J16"], ["burst-hads", "hads"], PROCS,
                           cfg=CFG, params=PARAMS, ils_params=FAST,
-                          plan_engine="batched")
+                          plan_engine="batched", batched_ils=BFAST)
 
 
 def test_grid_coverage(fleet_result):
@@ -54,7 +58,8 @@ def test_fleet_rows_match_per_cell_runs(fleet_result):
     """Concatenating processes along S must not change any cell: rerun
     one (job, policy) cell standalone and compare distributions."""
     job = make_job("J12")
-    plan = build_primary_map(job, CFG, BURST_HADS, FAST, engine="batched")
+    plan = build_primary_map(job, CFG, BURST_HADS, FAST, engine="batched",
+                             batched_params=BFAST)
     evs = sample_grid_events(job, plan,
                              [as_process(p) for p in PROCS], PARAMS)
     for i, pname in enumerate(["sc5", "wb"]):

@@ -14,7 +14,8 @@ from repro.core.dynamic import (BURST_HADS, HADS, ILS_ONDEMAND,
 from repro.core.ils import ILSParams
 from repro.core.types import CloudConfig, Job, Market, Solution, TaskSpec
 from repro.sim.events import SCENARIOS, SC_NONE, Scenario
-from repro.sim.mc_engine import MCParams, run_mc, simulate_mc
+from repro import api
+from repro.sim.mc_engine import MCParams, run_mc
 from repro.sim.simulator import Simulator
 
 CFG = CloudConfig()
@@ -141,9 +142,10 @@ def test_scenario_trends(j60, plan_bh, plan_hads):
     bh = run_mc(j60, plan_bh, CFG, SCENARIOS["sc5"], p)
     hd = run_mc(j60, plan_hads, CFG, SCENARIOS["sc5"], p)
     assert bh.deadline_met.mean() >= hd.deadline_met.mean()
-    od = simulate_mc(j60, CFG, ILS_ONDEMAND, SC_NONE,
-                     MCParams(n_scenarios=1, dt=30.0, seed=5),
-                     ils_params=FAST)
+    od = api.run(job=j60, policy=ILS_ONDEMAND, process=SC_NONE,
+                 backend="mc-adaptive", cfg=CFG,
+                 mc=MCParams(n_scenarios=1, dt=30.0, seed=5),
+                 ils=FAST).raw
     assert bh.cost.mean() < od.cost[0]
     # hibernation events actually fire under sc5
     assert bh.n_hibernations.mean() > 0.2

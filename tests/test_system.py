@@ -1,15 +1,23 @@
-"""End-to-end behaviour: the paper's full pipeline on every workload."""
+"""End-to-end behaviour: the paper's full pipeline on every workload,
+driven through the ``repro.api`` facade (the legacy ``simulate`` wrapper
+is a deprecated shim)."""
 import pytest
 
+from repro import api
 from repro.core.dynamic import BURST_HADS, HADS, ILS_ONDEMAND
 from repro.core.ils import ILSParams
 from repro.core.types import CloudConfig
 from repro.sim.events import SCENARIOS, SC_NONE
-from repro.sim.simulator import simulate
 from repro.sim.workloads import ALL_JOBS, make_job
 
 CFG = CloudConfig()
 FAST = ILSParams(max_iteration=15, max_attempt=10, seed=2)
+
+
+def simulate(job, cfg, pol, scenario, seed=0, params=None):
+    """One DES trace via the facade, returning the raw ``SimResult``."""
+    return api.run(job=job, policy=pol, process=scenario, backend="des",
+                   cfg=cfg, seed=seed, ils=params).raw
 
 
 @pytest.mark.parametrize("job_name", ALL_JOBS)

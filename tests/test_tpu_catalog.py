@@ -1,10 +1,11 @@
-"""Catalog-agnosticism: the full pipeline on the TPU-slice fleet."""
+"""Catalog-agnosticism: the full pipeline on the TPU-slice fleet, driven
+through the ``repro.api`` facade."""
+from repro import api
 from repro.cluster.catalog import tpu_cloud_config
-from repro.core.dynamic import BURST_HADS
 from repro.core.ils import ILSParams
 from repro.core.types import Job, TaskSpec
-from repro.sim.events import SCENARIOS
-from repro.sim.simulator import simulate
+
+FAST = ILSParams(max_iteration=15, max_attempt=10, seed=0)
 
 
 def _bag(n=12):
@@ -17,8 +18,8 @@ def _bag(n=12):
 
 def test_tpu_fleet_schedules_and_completes():
     cfg = tpu_cloud_config()
-    r = simulate(_bag(), cfg, BURST_HADS, SCENARIOS["none"], seed=0,
-                 params=ILSParams(max_iteration=15, max_attempt=10, seed=0))
+    r = api.run(job=_bag(), policy="burst-hads", process="none",
+                backend="des", cfg=cfg, seed=0, ils=FAST).raw
     assert r.deadline_met and r.unfinished == 0
     assert r.cost > 0
 
@@ -26,9 +27,8 @@ def test_tpu_fleet_schedules_and_completes():
 def test_tpu_fleet_survives_preemptions():
     cfg = tpu_cloud_config()
     for seed in (0, 1):
-        r = simulate(_bag(), cfg, BURST_HADS, SCENARIOS["sc2"], seed=seed,
-                     params=ILSParams(max_iteration=15, max_attempt=10,
-                                      seed=0))
+        r = api.run(job=_bag(), policy="burst-hads", process="sc2",
+                    backend="des", cfg=cfg, seed=seed, ils=FAST).raw
         assert r.deadline_met, (seed, r.makespan)
         assert r.unfinished == 0
 
@@ -36,12 +36,12 @@ def test_tpu_fleet_survives_preemptions():
 def test_tpu_fleet_monte_carlo_distribution():
     """DESIGN.md §2.2: the batched MC engine runs unchanged over the TPU
     capacity markets (preemption distributions instead of single traces)."""
-    from repro.sim.mc_engine import MCParams, simulate_mc
+    from repro.sim.mc_engine import MCParams
     cfg = tpu_cloud_config()
-    res = simulate_mc(_bag(), cfg, BURST_HADS, SCENARIOS["sc2"],
-                      MCParams(n_scenarios=16, dt=30.0, seed=0),
-                      ils_params=ILSParams(max_iteration=15, max_attempt=10,
-                                           seed=0))
+    res = api.run(job=_bag(), policy="burst-hads", process="sc2",
+                  backend="mc-adaptive", cfg=cfg,
+                  mc=MCParams(n_scenarios=16, dt=30.0, seed=0),
+                  ils=FAST).raw
     assert (res.unfinished == 0).all()
     assert res.deadline_met.mean() >= 0.8
     assert (res.cost > 0).all()
