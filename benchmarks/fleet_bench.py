@@ -26,7 +26,8 @@ from repro.core.dynamic import POLICIES, build_primary_map, policy
 from repro.core.ils import ILSParams
 from repro.core.ils_jax import BatchedILSParams
 from repro.core.types import CloudConfig
-from repro.sim.fleet import (sample_grid_events, scenario_sharding,
+from repro.sim.fleet import (evaluate_fleet, pad_scenarios,
+                             sample_grid_events, scenario_sharding,
                              shard_events)
 from repro.sim.market import (EventTensor, MarkovModulatedProcess,
                               PoissonProcess, WeibullProcess)
@@ -68,8 +69,9 @@ def run(job_names: tuple[str, ...] = ("J60", "J80"),
                                      ILS_FAST, engine="batched",
                                      batched_params=BATCHED_FAST)
             evs = sample_grid_events(job, plan, procs, params)
-            ev_all = shard_events(EventTensor.concat(evs),
-                                  scenario_sharding(len(procs) * s))
+            sharding, s_run = scenario_sharding(len(procs) * s)
+            ev_all = shard_events(
+                pad_scenarios(EventTensor.concat(evs), s_run), sharding)
 
             # warm both paths (jit cache is keyed on shapes + policy)
             run_mc_events(job, plan, cfg, evs[0], params)
@@ -139,8 +141,9 @@ def lattice(job_names: tuple[str, ...] = ("J60",), s: int = 64,
                                      engine="batched",
                                      batched_params=BATCHED_FAST)
             evs = sample_grid_events(job, plan, procs, params)
-            ev_all = shard_events(EventTensor.concat(evs),
-                                  scenario_sharding(len(procs) * s))
+            sharding, s_run = scenario_sharding(len(procs) * s)
+            ev_all = shard_events(
+                pad_scenarios(EventTensor.concat(evs), s_run), sharding)
             run_mc_events(job, plan, cfg, ev_all, params)       # warm
             t0 = time.perf_counter()
             res = run_mc_events(job, plan, cfg, ev_all, params)
@@ -169,3 +172,65 @@ def lattice_smoke() -> list[dict]:
     """CI-sized lattice cells — same J60 grid at a tiny batch so the
     committed rollup baseline and the CI smoke run share keys."""
     return lattice(s=8)
+
+
+def megabatch_grid(job_names: tuple[str, ...] = ("J50", "J56", "J60",
+                                                 "J64"),
+                   s: int = 64, dt: float = 30.0) -> list[dict]:
+    """Megabatch engine (``sim.megabatch``, DESIGN.md §2.7) vs the
+    per-cell fleet pipeline on a lattice grid, same planning knobs and
+    bit-identical rows.
+
+    Both engines are timed warm over their own ``mc_wall_s`` (engine
+    calls only — planning is cached and excluded), so ``vs_loop`` is the
+    pure fusion win: call count collapsing from cells to
+    (engine_view, shape bucket) groups.  ``vs_loop`` and the call/group
+    counts are what the CI gate diffs — the ratio is measured in one
+    process over identical tensors, so hardware speed cancels.  A
+    budgeted row rides along: same grid under sequential stopping,
+    reporting the scenarios actually consumed for tight cost CIs."""
+    from repro.sim.megabatch import ScenarioBudget, evaluate_grid
+
+    params = MCParams(n_scenarios=s, dt=dt, seed=0)
+    procs = process_grid(make_job(job_names[0]).deadline_s)[:2]
+    kw = dict(cfg=CloudConfig(), params=params, ils_params=ILS_FAST,
+              plan_engine="batched", batched_ils=BATCHED_FAST)
+    grid = (job_names, LATTICE_GRID, procs)
+
+    evaluate_fleet(*grid, **kw)                               # warm
+    rg = evaluate_grid(*grid, **kw)                           # warm
+    t_loop = min(evaluate_fleet(*grid, **kw).mc_wall_s for _ in range(3))
+    t_mega = min(evaluate_grid(*grid, **kw).mc_wall_s for _ in range(3))
+    n_cells = len(rg.rows)
+    total = rg.total_scenarios
+
+    bud = ScenarioBudget(chunk=max(4, s // 4), max_scenarios=s,
+                         rel_ci95=0.1, min_chunks=2)
+    rb = evaluate_grid(*grid, budget=bud, **kw)               # warm
+    t_bud = min(evaluate_grid(*grid, budget=bud, **kw).mc_wall_s
+                for _ in range(2))
+
+    key = {"job": "+".join(job_names), "policy": "lattice4",
+           "process": "+".join(p.name for p in procs), "s": s, "dt": dt}
+    return [
+        {"table": "megabatch", **key, "n_cells": n_cells,
+         "scenarios_total": total,
+         "loop_scen_per_s": round(total / max(t_loop, 1e-9), 1),
+         "mega_scen_per_s": round(total / max(t_mega, 1e-9), 1),
+         "vs_loop": round(t_loop / max(t_mega, 1e-9), 2),
+         "n_engine_calls": rg.n_engine_calls, "n_groups": rg.n_groups,
+         "n_devices": rg.n_devices},
+        {"table": "megabatch_budget", **key,
+         "scen_used": rb.total_scenarios, "scen_fixed": total,
+         "saved_frac": round(1.0 - rb.total_scenarios / total, 3),
+         # equal-precision throughput: fixed-S scenarios the budgeted
+         # run replaces, per second of budgeted wall time
+         "eff_scen_per_s": round(total / max(t_bud, 1e-9), 1),
+         "n_engine_calls": rb.n_engine_calls},
+    ]
+
+
+def megabatch_smoke() -> list[dict]:
+    """CI-sized megabatch grid: two small jobs sharing a shape bucket so
+    the fused calls genuinely exercise the row-parametric layout."""
+    return megabatch_grid(("J12", "J16"), s=8)

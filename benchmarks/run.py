@@ -62,7 +62,8 @@ DYNAMIC_ROLLUP = os.path.join(os.path.dirname(__file__), "..",
 
 
 def dynamic_rollup(sim_rows: list[dict], smoke: bool,
-                   outdir: str, lattice_rows: list[dict] = ()) -> list[dict]:
+                   outdir: str, lattice_rows: list[dict] = (),
+                   mega_rows: list[dict] = ()) -> list[dict]:
     """Headline dynamic-engine throughput per (job, policy, process, S,
     dt, stepping) + slots-skipped fraction, written to the root-level
     ``BENCH_dynamic.json`` and appended to ``results/trajectory.jsonl``
@@ -102,6 +103,22 @@ def dynamic_rollup(sim_rows: list[dict], smoke: bool,
                      "stepping": "adaptive",
                      "scen_per_s": r["scen_per_s"], "steps": r["steps"],
                      "slots_skipped_frac": r["slots_skipped_frac"]})
+
+    # megabatch grid rows (fleet_bench.megabatch_grid): whole-grid fused
+    # vs per-cell throughput — `vs_loop` (same-process ratio, hardware
+    # cancels) and the call/group counts are the gate's signals
+    for r in mega_rows:
+        if r.get("table") != "megabatch":
+            continue
+        rows.append({"table": "megabatch",
+                     **{k: r[k] for k in ("job", "policy", "process",
+                                          "s", "dt")},
+                     "stepping": "adaptive",
+                     "scen_per_s": r["mega_scen_per_s"],
+                     "vs_loop": r["vs_loop"],
+                     "n_engine_calls": r["n_engine_calls"],
+                     "n_groups": r["n_groups"],
+                     "n_cells": r["n_cells"]})
 
     def key_of(row):
         return tuple(row.get(k) for k in ("job", "policy", "process",
@@ -160,7 +177,12 @@ def main() -> None:
     lattice_rows = emit("lattice",
                         fleet_bench.lattice_smoke() if args.smoke
                         else fleet_bench.lattice(), fh)
-    dynamic_rollup(sim_rows, args.smoke, outdir, lattice_rows)
+
+    print("# Megabatch engine: whole grid fused vs per-cell pipeline")
+    mega_rows = emit("megabatch",
+                     fleet_bench.megabatch_smoke() if args.smoke
+                     else fleet_bench.megabatch_grid(), fh)
+    dynamic_rollup(sim_rows, args.smoke, outdir, lattice_rows, mega_rows)
 
     print("# Market/fleet: jobs x policies x market-process grid "
           "(sharded batch vs per-cell loop)")

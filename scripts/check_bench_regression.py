@@ -19,7 +19,14 @@ checks the two machine-independent signals instead:
   jump lattice got weaker (the failure mode this gate exists for);
 * ``vs_slot`` — adaptive/slot throughput ratio, measured over identical
   tensors in the same process, so hardware speed cancels: a *drop*
-  beyond the threshold means per-iteration overhead regressed.
+  beyond the threshold means per-iteration overhead regressed;
+* ``vs_loop`` — megabatch/per-cell fleet-grid throughput ratio (same
+  same-process construction, from ``fleet_bench.megabatch_grid``): a
+  drop beyond the threshold means grid fusion stopped paying for
+  itself;
+* ``n_engine_calls`` — fused calls for the megabatch grid,
+  deterministic given the grid: any *increase* means cells stopped
+  fusing (a shape-bucket or engine-view grouping regression).
 
 ``scen_per_s`` deltas are printed for information only.  Skips
 gracefully (exit 0, with a notice) when no baseline is committed yet,
@@ -87,6 +94,15 @@ def main() -> int:
             drop = 1.0 - f_["vs_slot"] / b["vs_slot"]
             checks.append(("vs_slot", f"{b['vs_slot']} -> {f_['vs_slot']}",
                            drop > args.threshold))
+        if b.get("vs_loop") and f_.get("vs_loop"):
+            drop = 1.0 - f_["vs_loop"] / b["vs_loop"]
+            checks.append(("vs_loop", f"{b['vs_loop']} -> {f_['vs_loop']}",
+                           drop > args.threshold))
+        if b.get("n_engine_calls") and f_.get("n_engine_calls"):
+            checks.append(
+                ("n_engine_calls",
+                 f"{b['n_engine_calls']} -> {f_['n_engine_calls']}",
+                 f_["n_engine_calls"] > b["n_engine_calls"]))
         bad = [c for c in checks if c[2]]
         rate = ""
         if b.get("scen_per_s") and f_.get("scen_per_s"):

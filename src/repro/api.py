@@ -16,10 +16,15 @@ entry point over all of them (DESIGN.md §2.6):
   (identical schema on every backend: cost/makespan distribution stats,
   deadline-met / unfinished fractions, event means) with the backend's
   native result attached as ``Result.raw``;
-* ``sweep`` — expand a jobs x policies x processes grid.  MC/fleet
-  backends route every (job, policy) cell through the fleet pipeline's
-  concat-S fusion — all processes in ONE scenario-sharded engine call —
-  instead of a Python loop per cell; the DES backend loops exact traces.
+* ``sweep`` — expand a jobs x policies x processes grid.  MC backends
+  route every (job, policy) cell through the fleet pipeline's concat-S
+  fusion — all processes in ONE scenario-sharded engine call — instead
+  of a Python loop per cell; the ``"fleet"`` backend goes further and
+  runs the whole grid through the megabatch engine
+  (``sim.megabatch.evaluate_grid``): cells fused per engine view into a
+  handful of sharded calls, with optional adaptive scenario budgeting
+  via ``budget=ScenarioBudget(...)``.  The DES backend loops exact
+  traces.
 
 The primary plan (Algorithm 1) is cached across backends: running the
 same (job, policy, ILS knobs) cell on the DES and then on an MC backend
@@ -235,9 +240,8 @@ def run(exp: Experiment | None = None, **kw) -> Result:
         res = run_mc(job, plan, cfg, scenario=as_process(exp.process),
                      params=mc)
         return _from_mc(job, backend, res, raw=res)
-    return _fused_cells([job], [pol], {pol.name: [as_process(exp.process)]},
-                        cfg, mc, ils, exp.batched_ils, "fleet",
-                        plan_engine="batched")[0]
+    return _grid_results([job], [pol], [as_process(exp.process)], cfg, mc,
+                         ils, exp.batched_ils, plan_engine="batched")[0]
 
 
 def sweep(jobs, policies=("burst-hads",), processes=None,
@@ -245,18 +249,24 @@ def sweep(jobs, policies=("burst-hads",), processes=None,
           mc: MCParams = MCParams(), ils: ILSParams | None = None,
           batched_ils: BatchedILSParams | None = None,
           seed: int | None = None,
-          plan_engine: str | None = None) -> list[Result]:
+          plan_engine: str | None = None,
+          budget=None) -> list[Result]:
     """Evaluate a jobs x policies x processes grid on one backend.
 
     ``processes=None`` defaults each policy to its own Table V sweep
     (``PolicyConfig.scenario_names()`` — on-demand maps only face the
-    event-free baseline).  On the MC and fleet backends each
-    (job, policy) cell runs as ONE fused engine call over all its
-    processes concatenated along the scenario axis (``sim.fleet``'s
-    concat-S trick); ``plan_engine`` overrides the planning search
-    (default: each policy's own ``planner`` axis, except the fleet
-    backend which plans batched like ``evaluate_fleet``).  Rows come
-    back in job → policy → process order regardless of fusion."""
+    event-free baseline).  On the MC backends each (job, policy) cell
+    runs as ONE fused engine call over all its processes concatenated
+    along the scenario axis (``sim.fleet``'s concat-S trick); the fleet
+    backend routes the whole grid through the megabatch engine
+    (``sim.megabatch.evaluate_grid`` — cells fused per engine view,
+    bit-identical rows, fewer calls), falling back to per-cell fusion
+    only when per-policy process sets are ragged.  ``budget`` (fleet
+    backend only) is a ``ScenarioBudget`` enabling adaptive
+    per-cell scenario counts.  ``plan_engine`` overrides the planning
+    search (default: each policy's own ``planner`` axis, except the
+    fleet backend which plans batched like ``evaluate_fleet``).  Rows
+    come back in job → policy → process order regardless of fusion."""
     jobs = [make_job(j) if isinstance(j, str) else j
             for j in ([jobs] if isinstance(jobs, (str, Job)) else jobs)]
     pols = [policy(p) for p in
@@ -287,18 +297,45 @@ def sweep(jobs, policies=("burst-hads",), processes=None,
 
     mc = dataclasses.replace(
         mc, stepping="slot" if backend == "mc-slot" else "adaptive")
-    if backend == "fleet" and plan_engine is None:
-        plan_engine = "batched"
+    if backend == "fleet":
+        plan_engine = plan_engine or "batched"
+        if len({tuple(p.name for p in ps)
+                for ps in procs_of.values()}) == 1:
+            return _grid_results(jobs, pols, procs_of[pols[0].name], cfg,
+                                 mc, ils, batched_ils, plan_engine,
+                                 budget=budget)
+    if budget is not None:
+        raise ValueError("budget= needs the megabatch path: "
+                         "backend='fleet' with one process set shared by "
+                         "every policy")
     return _fused_cells(jobs, pols, procs_of, cfg, mc, ils, batched_ils,
                         backend, plan_engine)
+
+
+def _grid_results(jobs, pols, procs, cfg, mc, ils, batched_ils,
+                  plan_engine, budget=None) -> list[Result]:
+    """Fleet backend: the whole grid through the megabatch engine, rows
+    re-shaped into the unified ``Result`` schema (``raw=None`` — the
+    fused calls never materialize per-cell ``MCResult`` objects)."""
+    from repro.sim.megabatch import evaluate_grid
+    fr = evaluate_grid(jobs, pols, procs, cfg=cfg, params=mc,
+                       ils_params=ils, plan_engine=plan_engine,
+                       batched_ils=batched_ils, budget=budget)
+    return [Result(job=r["job"], policy=r["policy"], process=r["process"],
+                   backend="fleet", s=r["s"], dt=r["dt"], cost=r["cost"],
+                   makespan=r["makespan"],
+                   deadline_met_frac=r["deadline_met_frac"],
+                   unfinished_frac=r["unfinished_frac"],
+                   mean_hibernations=r["mean_hibernations"],
+                   mean_resumes=r["mean_resumes"]) for r in fr.rows]
 
 
 def _fused_cells(jobs, pols, procs_of, cfg, mc, ils, batched_ils, backend,
                  plan_engine) -> list[Result]:
     """One concat-S engine call per (job, policy) — the fleet pipeline's
     fusion (DESIGN.md §2.4) behind the unified ``Result`` schema."""
-    from repro.sim.fleet import (sample_grid_events, scenario_sharding,
-                                 shard_events)
+    from repro.sim.fleet import (pad_scenarios, sample_grid_events,
+                                 scenario_sharding, shard_events)
     out = []
     for job in jobs:
         for pol in pols:
@@ -306,9 +343,11 @@ def _fused_cells(jobs, pols, procs_of, cfg, mc, ils, batched_ils, backend,
             plan = _plan(job, cfg, pol, ils, batched_ils,
                          engine=plan_engine)
             evs = sample_grid_events(job, plan, procs, mc)
+            sharding, s_run = scenario_sharding(
+                len(procs) * mc.n_scenarios)
             ev_all = shard_events(
-                EventTensor.concat(evs),
-                scenario_sharding(len(procs) * mc.n_scenarios))
+                pad_scenarios(EventTensor.concat(evs),
+                              s_run).with_index(), sharding)
             res = run_mc_events(job, plan, cfg, ev_all, mc, label="sweep")
             s = mc.n_scenarios
             for i, proc in enumerate(procs):

@@ -19,8 +19,10 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
+import warnings
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
@@ -49,6 +51,10 @@ class FleetResult:
     stepping: str = "adaptive"
     slots_total: int = 0     # scenario-slots covered across the grid
     slots_visited: int = 0   # scenario-slots full-stepped (rest jumped)
+    engine: str = "fleet"    # "fleet" (per-cell calls) | "megabatch"
+    n_engine_calls: int = 0  # fused calls issued (megabatch only)
+    n_groups: int = 0        # distinct (view, shape-bucket) groups
+    budget: dict | None = None   # ScenarioBudget knobs when budgeting ran
 
     @property
     def total_scenarios(self) -> int:
@@ -76,7 +82,11 @@ class FleetResult:
                 "stepping": self.stepping,
                 "slots_total": self.slots_total,
                 "slots_visited": self.slots_visited,
-                "slots_skipped_frac": round(self.slots_skipped_frac, 3)}
+                "slots_skipped_frac": round(self.slots_skipped_frac, 3),
+                "engine": self.engine,
+                "n_engine_calls": self.n_engine_calls,
+                "n_groups": self.n_groups,
+                "budget": self.budget}
 
     def write_json(self, path: str) -> None:
         with open(path, "w") as f:
@@ -84,13 +94,64 @@ class FleetResult:
                        "meta": self.meta(), "rows": self.rows}, f, indent=2)
 
 
+_PAD_WARNED = False
+
+
 def scenario_sharding(n_scenarios: int):
-    """NamedSharding over the scenario axis, or None on a single device or
-    when the device count does not divide S (replicated fallback)."""
+    """Scenario-axis placement plan: ``(sharding, n_padded)``.
+
+    ``sharding`` is a NamedSharding over the scenario axis (None on a
+    single-device host — the only replicated fallback left), and
+    ``n_padded`` is the row count the caller must grow the tensor to
+    (``pad_scenarios``) before placing it: S is rounded up to the next
+    device multiple instead of silently dropping the sharding when the
+    device count does not divide it.  Pad scenarios are event-free and
+    excluded from every statistic (``slot_coverage`` and the row slices
+    never reach them); a one-time warning flags that padding happened."""
+    global _PAD_WARNED
     devs = jax.devices()
-    if len(devs) <= 1 or n_scenarios % len(devs) != 0:
-        return None
-    return NamedSharding(Mesh(np.array(devs), ("s",)), PartitionSpec("s"))
+    if len(devs) <= 1:
+        return None, n_scenarios
+    pad = (-n_scenarios) % len(devs)
+    if pad and not _PAD_WARNED:
+        _PAD_WARNED = True
+        warnings.warn(
+            f"scenario axis S={n_scenarios} padded to "
+            f"{n_scenarios + pad} for {len(devs)} devices (pad scenarios "
+            f"are masked out of all statistics)", stacklevel=2)
+    return (NamedSharding(Mesh(np.array(devs), ("s",)),
+                          PartitionSpec("s")), n_scenarios + pad)
+
+
+def pad_scenarios(ev: EventTensor, n_rows: int) -> EventTensor:
+    """Grow the scenario axis to ``n_rows`` with event-free scenarios
+    (zero request counts — they draw no events and finish on workload
+    dynamics alone).  The next-event index is rebuilt by the caller's
+    ``with_index`` pass; callers must keep their row slices inside the
+    original S so pad rows never enter a statistic."""
+    dn = n_rows - ev.n_scenarios
+    if dn < 0:
+        raise ValueError(f"cannot shrink S={ev.n_scenarios} to {n_rows}")
+    if dn == 0:
+        return ev
+    pad_k = ((0, dn), (0, 0))
+    pad_u = ((0, dn), (0, 0), (0, 0))
+    return EventTensor(jnp.pad(ev.hib_k, pad_k),
+                       jnp.pad(ev.hib_u, pad_u, constant_values=-2.0),
+                       jnp.pad(ev.res_k, pad_k),
+                       jnp.pad(ev.res_u, pad_u, constant_values=-2.0),
+                       None)
+
+
+def slot_coverage(res, sl: slice) -> tuple[int, int]:
+    """(covered, full-stepped) scenario-slots for one row slice of an
+    engine result — the one formula both the per-row
+    ``slots_skipped_frac`` and the ``FleetResult`` aggregate are built
+    from, so the two can never drift apart (and sharding's pad scenarios,
+    which live past every real slice, never leak into either)."""
+    if res.exit_slots is None or res.visited is None:
+        return 0, 0
+    return (int(res.exit_slots[sl].sum()), int(res.visited[sl].sum()))
 
 
 def shard_events(ev: EventTensor, sharding) -> EventTensor:
@@ -109,16 +170,19 @@ def shard_events(ev: EventTensor, sharding) -> EventTensor:
 
 def sample_grid_events(job: Job, plan, processes, params: MCParams
                        ) -> list[EventTensor]:
-    """One tensor per process for this (job, plan) cell.  Process ``i``
-    draws from ``fold_in(PRNGKey(params.seed), i)`` so cells are
-    reproducible and processes are independent."""
+    """One tensor per process for this (job, plan) cell.  Each process
+    draws from ``fold_in(PRNGKey(params.seed), p.fingerprint)`` — keyed
+    on the process's *parameterization*, not its grid position — so
+    reordering, inserting or removing processes leaves every other
+    process's tensor bit-identical (a position-keyed ``fold_in(i)``
+    would silently re-roll the whole grid)."""
     v = len(plan_column_uids(plan))
     n = n_slots_for(job.deadline_s, params)
     base = jax.random.PRNGKey(params.seed)
-    return [p.sample(jax.random.fold_in(base, i), s=params.n_scenarios,
-                     n_slots=n, v=v, dt=params.dt,
+    return [p.sample(jax.random.fold_in(base, p.fingerprint),
+                     s=params.n_scenarios, n_slots=n, v=v, dt=params.dt,
                      deadline_s=job.deadline_s)
-            for i, p in enumerate(processes)]
+            for p in processes]
 
 
 def evaluate_fleet(jobs, policies, processes,
@@ -151,7 +215,9 @@ def evaluate_fleet(jobs, policies, processes,
     ils_params = ils_params or ILSParams(seed=params.seed)
 
     s = params.n_scenarios
-    sharding = scenario_sharding(len(processes) * s) if shard else None
+    s_real = len(processes) * s
+    sharding, s_run = scenario_sharding(s_real) if shard \
+        else (None, s_real)
     rows: list[dict] = []
     t_start = time.perf_counter()
     plan_wall = mc_wall = 0.0
@@ -164,15 +230,21 @@ def evaluate_fleet(jobs, policies, processes,
                                      batched_params=batched_ils)
             plan_wall += time.perf_counter() - t0
             evs = sample_grid_events(job, plan, processes, params)
-            ev_all = shard_events(EventTensor.concat(evs), sharding)
+            ev_all = pad_scenarios(EventTensor.concat(evs), s_run)
+            ev_all = shard_events(ev_all.with_index(), sharding)
             t0 = time.perf_counter()
             res = run_mc_events(job, plan, cfg, ev_all, params,
                                 label="fleet")
             mc_wall += time.perf_counter() - t0
-            slots_total += res.slots_total
-            slots_visited += res.slots_visited
+            # aggregate over the *real* scenarios only — sharding's pad
+            # rows (past s_real) run event-free and must not skew the
+            # event-horizon coverage stats
+            cov, stp = slot_coverage(res, slice(0, s_real))
+            slots_total += cov
+            slots_visited += stp
             for i, proc in enumerate(processes):
                 sl = slice(i * s, (i + 1) * s)
+                cov, stp = slot_coverage(res, sl)
                 rows.append({
                     "job": job.name, "policy": policy.name,
                     "process": proc.name, "s": s, "dt": params.dt,
@@ -187,10 +259,10 @@ def evaluate_fleet(jobs, policies, processes,
                         float(np.mean(res.n_hibernations[sl])),
                     "mean_resumes": float(np.mean(res.n_resumes[sl])),
                     # per-cell share of the event-horizon win: fraction
-                    # of this slice's scenario-slots jumped in closed form
+                    # of this slice's scenario-slots jumped in closed
+                    # form — same slot_coverage formula as the aggregate
                     "slots_skipped_frac": round(
-                        1.0 - float(res.visited[sl].sum())
-                        / max(1, int(res.exit_slots[sl].sum())), 3),
+                        1.0 - stp / max(1, cov), 3),
                 })
     return FleetResult(rows=rows, wall_s=time.perf_counter() - t_start,
                        mc_wall_s=mc_wall, plan_wall_s=plan_wall,

@@ -39,6 +39,7 @@ import csv
 import dataclasses
 import functools
 import math
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -105,6 +106,35 @@ class EventTensor:
                     f"{name} has dtype {a.dtype}, want {want_dt}")
         return self
 
+    def pad(self, *, n_slots: int | None = None, v: int | None = None
+            ) -> "EventTensor":
+        """Grow the slot and/or column axes to a bucket size
+        (``sim.megabatch``'s shape bucketing, DESIGN.md §2.7).
+
+        Pad slots carry zero event requests, so the engine's next-event
+        pointer never lands on them; pad columns carry score ``-2.0``,
+        the contract's opt-out sentinel (any negative score excludes a
+        column regardless of rank — DESIGN.md §2.4), so a request count
+        can never spill onto a pad column.  ``nxt`` is dropped — rebuild
+        with ``with_index`` after the last layout change."""
+        n1 = self.n_slots if n_slots is None else n_slots
+        v1 = self.n_vms if v is None else v
+        if n1 < self.n_slots or v1 < self.n_vms:
+            raise EventTensorError(
+                f"pad cannot shrink [{self.n_slots},{self.n_vms}] "
+                f"to [{n1},{v1}]")
+        if (n1, v1) == (self.n_slots, self.n_vms):
+            return dataclasses.replace(self, nxt=None)
+        dn, dv = n1 - self.n_slots, v1 - self.n_vms
+        pad_k = ((0, 0), (0, dn))
+        pad_u = ((0, 0), (0, dn), (0, dv))
+        return EventTensor(
+            jnp.pad(self.hib_k, pad_k),
+            jnp.pad(self.hib_u, pad_u, constant_values=-2.0),
+            jnp.pad(self.res_k, pad_k),
+            jnp.pad(self.res_u, pad_u, constant_values=-2.0),
+            None)
+
     @staticmethod
     def concat(tensors: "list[EventTensor]") -> "EventTensor":
         """Stack along the scenario axis — how the fleet pipeline turns a
@@ -159,6 +189,18 @@ class MarketProcess:
     """
 
     name: str = "market"
+
+    @property
+    def fingerprint(self) -> int:
+        """Stable 32-bit fingerprint of the full parameterization.
+
+        Subclasses are frozen dataclasses, so ``repr`` enumerates every
+        field deterministically (and, unlike ``hash``, is independent of
+        the interpreter's string-hash salt).  RNG streams keyed on this —
+        ``fleet.sample_grid_events``, the megabatch chunk schedule —
+        depend on what the process *is*, never on where it sits in a
+        grid's process list."""
+        return zlib.crc32(repr(self).encode())
 
     def sample(self, key, *, s: int, n_slots: int, v: int, dt: float,
                deadline_s: float) -> EventTensor:

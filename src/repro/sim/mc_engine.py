@@ -292,6 +292,22 @@ def _scalars(job: Job, cfg: CloudConfig, params: MCParams,
 # ---------------------------------------------------------------------------
 # Jitted engine helpers
 # ---------------------------------------------------------------------------
+def _rowp_helpers(ref):
+    """Accessor trio over a plan-array leaf layout: legacy 1-d per-cell
+    arrays ([B] tasks / [V] columns) or the megabatch row-parametric
+    layout ([S, B] / [S, V] — one plan row per scenario, DESIGN.md §2.7).
+    ``gv`` gathers a column array by a [S, B] index, ``g1`` by a [S]
+    index, ``bc`` broadcasts against [S, ·] state.  The branches are
+    trace-time Python, so the legacy path compiles exactly as before."""
+    if ref.ndim == 2:
+        return (lambda x, idx: jnp.take_along_axis(x, idx, axis=1),
+                lambda x, idx: jnp.take_along_axis(
+                    x, idx[:, None], axis=1)[:, 0],
+                lambda x: x)
+    return (lambda x, idx: x[idx], lambda x, idx: x[idx],
+            lambda x: x[None])
+
+
 def _dest_column(load, vstate, boot, credits, aff_load, aff_mem, arr, sc, t,
                  *, allow_burstable: bool):
     """Alg. 4's cascade as one argmin-over-columns rule: score every column
@@ -301,22 +317,23 @@ def _dest_column(load, vstate, boot, credits, aff_load, aff_mem, arr, sc, t,
     cores, speed = arr["cores"], arr["speed"]
     burst, odm, memv, price = (arr["burst"], arr["odm"], arr["memv"],
                                arr["price"])
-    fits = aff_mem[:, None] <= memv[None] + 1e-6
+    _, _, bc = _rowp_helpers(speed)
+    fits = aff_mem[:, None] <= bc(memv) + 1e-6
     ok_active = (vstate == VM_ACTIVE) & fits
     if allow_burstable:
         # enough credits to run the whole moved load at full speed
-        cred_ok = credits * sc["bperiod"] * speed[None] > aff_load[:, None]
-        ok_active &= ~burst[None] | cred_ok
+        cred_ok = credits * sc["bperiod"] * bc(speed) > aff_load[:, None]
+        ok_active &= ~bc(burst) | cred_ok
     else:
-        ok_active &= ~burst[None]
-    ok_new = (vstate == NOT_LAUNCHED) & odm[None] & fits
+        ok_active &= ~bc(burst)
+    ok_new = (vstate == NOT_LAUNCHED) & bc(odm) & fits
 
-    drain = load / (cores * speed)[None]
+    drain = load / bc(cores * speed)
     boot_left = jnp.clip(boot - t[:, None], 0.0, sc["omega"])
     score = jnp.where(
         ok_active,
-        drain + boot_left - jnp.where(burst[None], 1.0, 0.0),
-        jnp.where(ok_new, sc["omega"] + price[None] * 3600.0, BIG))
+        drain + boot_left - jnp.where(bc(burst), 1.0, 0.0),
+        jnp.where(ok_new, sc["omega"] + bc(price) * 3600.0, BIG))
     dest = jnp.argmin(score, axis=1).astype(jnp.int32)
     feasible = jnp.min(score, axis=1) < BIG * 0.5
     return dest, feasible
@@ -324,9 +341,10 @@ def _dest_column(load, vstate, boot, credits, aff_load, aff_mem, arr, sc, t,
 
 def _checkpoint_floor(rem, total, cp, mask):
     """Roll masked tasks' progress back to their checkpoint grid (§III-E)."""
-    done = jnp.maximum(total[None] - rem, 0.0)
-    done_cp = jnp.floor(done / cp[None] + 1e-6) * cp[None]
-    return jnp.where(mask, total[None] - done_cp, rem)
+    _, _, bc = _rowp_helpers(total)
+    done = jnp.maximum(bc(total) - rem, 0.0)
+    done_cp = jnp.floor(done / bc(cp) + 1e-6) * bc(cp)
+    return jnp.where(mask, bc(total) - done_cp, rem)
 
 
 def _apply_launch(vstate, boot, dest, do, t, sc, iota_v):
@@ -348,21 +366,22 @@ def _migrate_spread(do_ev, aff, rem, load, vstate, boot, credits, assign,
     hibernated bag fans out instead of dog-piling one target."""
     total, cp, mem_t, speed = arr["total"], arr["cp"], arr["mem_t"], \
         arr["speed"]
+    _, g1, bc = _rowp_helpers(speed)
     iota_v = jnp.arange(vstate.shape[1])[None]
     rem = _checkpoint_floor(rem, total, cp, aff & do_ev[:, None])
     aff_rank = jnp.cumsum(aff.astype(jnp.int32), axis=1) - 1
     for g in range(rounds):
         mg = aff & (aff_rank % rounds == g)
         load_g = jnp.sum(jnp.where(mg, rem, 0.0), axis=1)
-        mem_g = jnp.max(jnp.where(mg, mem_t[None], 0.0), axis=1)
+        mem_g = jnp.max(jnp.where(mg, bc(mem_t), 0.0), axis=1)
         dest, feasible = _dest_column(load, vstate, boot, credits, load_g,
                                       mem_g, arr, sc, t1,
                                       allow_burstable=allow_burstable)
         do_g = do_ev & jnp.any(mg, axis=1) & feasible
         moved = mg & do_g[:, None]
-        has_prog = (total[None] - rem) > 1e-6
+        has_prog = (bc(total) - rem) > 1e-6
         rem = rem + jnp.where(moved & has_prog,
-                              sc["restore"] * speed[dest][:, None], 0.0)
+                              sc["restore"] * g1(speed, dest)[:, None], 0.0)
         assign = jnp.where(moved, dest[:, None], assign)
         mode = jnp.where(moved, 0, mode)
         vstate, boot = _apply_launch(vstate, boot, dest, do_g, t1, sc,
@@ -400,26 +419,38 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
     bfrac, memv = arr["bfrac"], arr["memv"]
     crate, ccap = arr["crate"], arr["ccap"]
     spot, burst = arr["spot"], arr["burst"]
-    b, v = total.shape[0], price.shape[0]
+    # row-parametric megabatch mode (sim.megabatch, DESIGN.md §2.7): plan
+    # leaves arrive as [S, B] / [S, V] rows — one plan per scenario row —
+    # and the job-dependent scalars (deadline, max_slots) as [S].  All
+    # branches below are trace-time Python on array rank, so the legacy
+    # per-cell layout compiles to exactly the program it always did.
+    rowp = speed.ndim == 2
+    gv, g1, bc = _rowp_helpers(speed)
+    b, v = total.shape[-1], price.shape[-1]
     dt = sc["dt"]
     iota_v = jnp.arange(v)[None]
     rows = jnp.arange(s)
     bi = arr["burst_idx"]
     adaptive = stepping == "adaptive"
     n_slots = ev.hib_k.shape[1]
+    # per-row deadline broadcasts against [S, V] work maxima in the
+    # deferred-HADS safe-time rule; a scalar everywhere else
+    dl2 = sc["deadline"][:, None] if rowp else sc["deadline"]
+    init2 = (lambda x: x) if rowp else \
+        (lambda x: jnp.tile(x[None], (s, 1)))
 
     launched0 = arr["launched0"]
     carry = (
         jnp.zeros(s, jnp.int32),                                  # slot i[S]
-        jnp.tile(jnp.where(launched0, VM_ACTIVE,
-                           NOT_LAUNCHED).astype(jnp.int32)[None], (s, 1)),
-        jnp.tile(jnp.where(launched0, sc["omega"], BIG)[None], (s, 1)),
+        init2(jnp.where(launched0, VM_ACTIVE,
+                        NOT_LAUNCHED).astype(jnp.int32)),
+        init2(jnp.where(launched0, sc["omega"], BIG)),
         jnp.zeros((s, v), jnp.float32),                           # billed
-        jnp.tile(jnp.where(launched0 & burst, arr["cinit"],
-                           0.0)[None], (s, 1)),                   # credits
-        jnp.tile(total[None], (s, 1)),                            # rem
-        jnp.tile(arr["assign0"][None], (s, 1)),                   # assign
-        jnp.tile(arr["mode0"][None], (s, 1)),                     # mode
+        init2(jnp.where(launched0 & burst, arr["cinit"],
+                        0.0)),                                    # credits
+        init2(total),                                             # rem
+        init2(arr["assign0"]),                                    # assign
+        init2(arr["mode0"]),                                      # mode
         jnp.full((s, b), BIG, jnp.float32),                       # done_at
         jnp.zeros(s, jnp.int32),                                  # n_hib
         jnp.zeros(s, jnp.int32),                                  # n_res
@@ -457,6 +488,13 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
                pending[:, :, None]).astype(jnp.float32)       # [S, B, V]
         cum = jnp.cumsum(ohp, axis=1)
         cnt = cum[:, -1, :]
+        # burstable-column view: every credit op below runs on the static
+        # column subset ``bi`` — in row-parametric mode that is the
+        # *union* of the fused plans' burstable positions (a non-burst
+        # column there has crate = ccap = 0 and can neither accrue nor
+        # bound anything, so the union loses no information and keeps
+        # the per-iteration credit work O(K), not O(V))
+        ohb = ohp[:, :, bi]
 
         def col_sum(w):
             """Per-column sum of the [S, B] weight vector ``w``."""
@@ -464,15 +502,17 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
 
         rank = jnp.take_along_axis(cum, assign[:, :, None],
                                    axis=2)[:, :, 0] - 1.0
-        burst_t = burst[assign]
-        run0 = pending & (rank < cores[assign])
+        burst_t = gv(burst, assign)
+        run0 = pending & (rank < gv(cores, assign))
         if not mem_safe:
             memcum = jnp.take_along_axis(
-                jnp.cumsum(ohp * mem_t[None, :, None], axis=1),
+                jnp.cumsum(ohp * (mem_t[:, :, None] if rowp
+                                  else mem_t[None, :, None]), axis=1),
                 assign[:, :, None], axis=2)[:, :, 0]
-            run0 &= memcum <= memv[assign] + 1e-6
+            run0 &= memcum <= gv(memv, assign) + 1e-6
 
-        cap = ccap[bi][None]
+        cap = ccap[:, bi] if rowp else ccap[bi][None]
+        crate_b = crate[:, bi] if rowp else crate[bi][None]
 
         if adaptive:
             # ============================================================
@@ -499,9 +539,9 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
             rate0 = jnp.take_along_axis(live01, assign, axis=1)
             cred_ok0 = jnp.take_along_axis(credits > 1e-9, assign, axis=1)
             sfac0 = jnp.where((mode == 1) | (burst_t & ~cred_ok0),
-                              bfrac[assign], 1.0)
-            drem0 = dt * rate0 * speed[assign] * sfac0 * run0
-            spend0 = jnp.einsum("sbk,sb->sk", ohp[:, :, bi],
+                              gv(bfrac, assign), 1.0)
+            drem0 = dt * rate0 * gv(speed, assign) * sfac0 * run0
+            spend0 = jnp.einsum("sbk,sb->sk", ohb,
                                 (run0 & (mode == 0)).astype(jnp.float32))
 
             # (1) next nonzero event slot, O(1) from the per-scenario
@@ -534,7 +574,7 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
             # (5) burstable credit boundaries: a bucket emptying (speed
             # factor flips), refilling from empty, or reaching cap —
             # between them the buckets are piecewise linear
-            r_c = dt * live01[:, bi] * crate[bi][None] \
+            r_c = dt * live01[:, bi] * crate_b \
                 - (dt / sc["bperiod"]) * spend0
             c0 = credits[:, bi]
             act_b = active0[:, bi]
@@ -558,7 +598,7 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
             # (pure-freeze policies never fire: resume is their only out)
             if policy.deferred_migration:
                 maxw0 = jnp.max(ohp * rem[:, :, None], axis=1)
-                t_safe0 = sc["deadline"] - (
+                t_safe0 = dl2 - (
                     sc["omega"] + maxw0 / sc["od_speed"] + sc["restore"]
                     + sc["margin"])
                 kf = jnp.where((vstate == VM_HIBERNATED) & (cnt > 0.5),
@@ -596,8 +636,9 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
                 maxw = jnp.max(ohp * rem[:, :, None], axis=1) \
                     if policy.deferred_migration else None
             billed = billed + mf[:, None] * dt * live01 * gate[:, None]
-            credits = credits.at[:, bi].set(jnp.where(
-                act_b, jnp.clip(c0 + mf[:, None] * r_c, 0.0, cap), c0))
+            span_cred = jnp.where(
+                act_b, jnp.clip(c0 + mf[:, None] * r_c, 0.0, cap), c0)
+            credits = credits.at[:, bi].set(span_cred)
             i = i + m
         elif use_kernel:
             # accelerator path: the Pallas kernel supplies the [S, V]
@@ -640,10 +681,10 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
             * in_h[:, None]
         rate_t = jnp.take_along_axis(live, assign, axis=1)
         cred_ok = jnp.take_along_axis(credits > 1e-9, assign, axis=1)
-        sfac = jnp.where((mode == 1) | (burst_t & ~cred_ok), bfrac[assign],
-                         1.0)
+        sfac = jnp.where((mode == 1) | (burst_t & ~cred_ok),
+                         gv(bfrac, assign), 1.0)
         run = run0
-        drem = dt * rate_t * speed[assign] * sfac * run
+        drem = dt * rate_t * gv(speed, assign) * sfac * run
         rem2 = jnp.maximum(rem - drem, 0.0)
         newly = pending & (rem2 <= 0.0)
         frac = jnp.clip(rem / jnp.maximum(drem, 1e-9), 0.0, 1.0)
@@ -652,11 +693,11 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
         # ---- billing (pauses during hibernation, ends at termination /
         # scenario completion) + burstable credit accrual -----------------
         billed = billed + dt * live * gate[:, None]
-        spend_b = jnp.einsum("sbk,sb->sk", ohp[:, :, bi],
+        spend_b = jnp.einsum("sbk,sb->sk", ohb,
                              (run & (mode == 0)).astype(jnp.float32))
         credits = credits.at[:, bi].set(jnp.where(
             active[:, bi],
-            jnp.clip(credits[:, bi] + dt * live[:, bi] * crate[bi][None]
+            jnp.clip(credits[:, bi] + dt * live[:, bi] * crate_b
                      - (dt / sc["bperiod"]) * spend_b, 0.0, cap),
             credits[:, bi]))
 
@@ -664,7 +705,7 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
 
         # ---- hibernation events (victims: requested count resolved
         # against the live eligible set — active, booted, spot) -----------
-        hib = _select(hib_u, active & spot[None] &
+        hib = _select(hib_u, active & bc(spot) &
                       (boot <= t1[:, None]), hib_k) & \
             gate[:, None]
         do_hib = jnp.any(hib, axis=1)
@@ -703,8 +744,8 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
             # (conservative single-wave estimate on the slowest on-demand
             # type, mirroring Simulator._hads_latest_safe_time); under
             # hibernation="freeze" tasks stay frozen until resume instead
-            t_safe = sc["deadline"] - (sc["omega"] + maxw / sc["od_speed"]
-                                       + sc["restore"] + sc["margin"])
+            t_safe = dl2 - (sc["omega"] + maxw / sc["od_speed"]
+                            + sc["restore"] + sc["margin"])
             fire = (vstate == VM_HIBERNATED) & (cnt > 0.5) & \
                 (t1[:, None] >= t_safe - dt) & gate[:, None]
             aff2 = (rem2 > 0) & jnp.take_along_axis(fire, assign, axis=1)
@@ -750,28 +791,29 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
                     thief = jnp.argmin(jnp.where(idle, iota_v, v + 1),
                                        axis=1).astype(jnp.int32)
                     has_thief = jnp.any(idle, axis=1)
-                    queued = jnp.where(burst[None], 0.0,
-                                       jnp.maximum(cl - cores[None], 0.0))
+                    queued = jnp.where(bc(burst), 0.0,
+                                       jnp.maximum(cl - bc(cores), 0.0))
                     vict = jnp.argmax(queued, axis=1).astype(jnp.int32)
                     has_q = jnp.max(queued, axis=1) > 0.5
                     on_vict = (rem2 > 0) & (a == vict[:, None]) & \
-                        (rank >= cores[vict][:, None])
+                        (rank >= g1(cores, vict)[:, None])
                     tsk = jnp.argmax(jnp.where(on_vict, rem2, -1.0),
                                      axis=1).astype(jnp.int32)
                     do_steal = has_thief & has_q & gate & \
                         jnp.any(on_vict, axis=1) & \
-                        (mem_t[tsk] <= memv[thief] + 1e-6)
+                        (g1(mem_t, tsk) <= g1(memv, thief) + 1e-6)
                     a = a.at[rows, tsk].set(
                         jnp.where(do_steal, thief, a[rows, tsk]))
                     m = m.at[rows, tsk].set(
-                        jnp.where(do_steal, burst[thief].astype(jnp.int32),
+                        jnp.where(do_steal,
+                                  g1(burst, thief).astype(jnp.int32),
                                   m[rows, tsk]))
                     shift = do_steal[:, None].astype(jnp.float32)
                     cl = cl + shift * (iota_v == thief[:, None]) \
                         - shift * (iota_v == vict[:, None])
                 assign, mode, cnt_live = a, m, cl
             term = (vstate == VM_ACTIVE) & booted & (cnt_live < 0.5) & \
-                ~burst[None] & ~rcv & (is_ac & gate)[:, None]
+                ~bc(burst) & ~rcv & (is_ac & gate)[:, None]
             vstate = jnp.where(term, VM_TERMINATED, vstate)
             return vstate, assign, mode
 
@@ -779,15 +821,20 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
             jnp.any(is_ac), ac_block, lambda ops: ops,
             (vstate, assign, mode))
 
+        # exited rows park at their own horizon — under the row-parametric
+        # layout that can sit strictly inside the padded slot axis, so
+        # route them to the (dropped) pad index explicitly; for the legacy
+        # layout i == max_slots == n_slots was already out of range
+        i_mark = jnp.where(i < sc["max_slots"], i, n_slots)
         return (jnp.minimum(i1, sc["max_slots"]), vstate, boot, billed,
                 credits, rem2, assign, mode, done_at, nhib, nres,
-                nsteps + 1, visited.at[rows, i].set(True, mode="drop"))
+                nsteps + 1, visited.at[rows, i_mark].set(True, mode="drop"))
 
     out = jax.lax.while_loop(cond, step, carry)
     (i_fin, _, _, billed, _, rem, _, _, done_at, nhib, nres, nsteps,
      visited) = out
     makespan = jnp.max(jnp.where(done_at < BIG * 0.5, done_at, 0.0), axis=1)
-    return {"cost": jnp.sum(billed * price[None], axis=1),
+    return {"cost": jnp.sum(billed * bc(price), axis=1),
             "makespan": makespan,
             "unfinished": jnp.sum(rem > 0.0, axis=1),
             "billed": billed, "n_hib": nhib, "n_res": nres,

@@ -19,7 +19,8 @@ from repro.core.dynamic import BURST_HADS, HADS, build_primary_map
 from repro.core.ils import ILSParams
 from repro.core.ils_jax import BatchedILSParams
 from repro.core.types import CloudConfig
-from repro.sim.fleet import evaluate_fleet, sample_grid_events
+from repro.sim.fleet import (evaluate_fleet, sample_grid_events,
+                             slot_coverage)
 from repro.sim.market import WeibullProcess, as_process
 from repro.sim.mc_engine import MCParams, run_mc_events
 from repro.sim.workloads import make_job
@@ -96,6 +97,47 @@ def test_event_tensor_column_mismatch_raises():
         run_mc_events(job, plan, CFG, ev, PARAMS)
 
 
+def test_slot_coverage_rows_sum_to_aggregate(fleet_result):
+    """Per-row skip fractions and the FleetResult aggregate are the same
+    ``slot_coverage`` formula: a standalone cell run sliced per process
+    must sum exactly to the whole-result coverage."""
+    job = make_job("J12")
+    plan = build_primary_map(job, CFG, BURST_HADS, FAST, engine="batched",
+                             batched_params=BFAST)
+    evs = sample_grid_events(job, plan,
+                             [as_process(p) for p in PROCS], PARAMS)
+    from repro.sim.market import EventTensor
+    res = run_mc_events(job, plan, CFG,
+                        EventTensor.concat(evs).with_index(), PARAMS)
+    s = PARAMS.n_scenarios
+    parts = [slot_coverage(res, slice(i * s, (i + 1) * s))
+             for i in range(len(PROCS))]
+    whole = slot_coverage(res, slice(0, len(PROCS) * s))
+    assert tuple(map(sum, zip(*parts))) == whole
+    # and the pipeline's aggregate is consistent with its own rows
+    assert 0.0 <= fleet_result.slots_skipped_frac <= 1.0
+    for r in fleet_result.rows:
+        assert 0.0 <= r["slots_skipped_frac"] <= 1.0
+
+
+def test_sample_grid_events_keyed_by_process_fingerprint():
+    """Event tensors are keyed on each process's parameterization, not
+    its grid position: reordering or dropping neighbours leaves a
+    process's tensor bit-identical."""
+    job = make_job("J12")
+    plan = build_primary_map(job, CFG, BURST_HADS, FAST, engine="batched",
+                             batched_params=BFAST)
+    procs = [as_process(p) for p in PROCS]
+    fwd = sample_grid_events(job, plan, procs, PARAMS)
+    rev = sample_grid_events(job, plan, procs[::-1], PARAMS)
+    alone = sample_grid_events(job, plan, procs[1:], PARAMS)
+    for a, b in ((fwd[0], rev[1]), (fwd[1], rev[0]), (fwd[1], alone[0])):
+        np.testing.assert_array_equal(a.hib_k, b.hib_k)
+        np.testing.assert_array_equal(a.hib_u, b.hib_u)
+        np.testing.assert_array_equal(a.res_k, b.res_k)
+        np.testing.assert_array_equal(a.res_u, b.res_u)
+
+
 SHARD_SCRIPT = r"""
 import numpy as np
 from repro.core.ils import ILSParams
@@ -115,6 +157,21 @@ for ra, rb in zip(a.rows, b.rows):
                                rtol=1e-6)
     np.testing.assert_allclose(ra["makespan"]["mean"],
                                rb["makespan"]["mean"], rtol=1e-6)
+# non-divisible S: 3 scenarios on 2 devices pad to 4 event-free rows,
+# stay sharded (no silent replicated fallback), and the pads never
+# reach a statistic
+import warnings
+kw3 = dict(kw, params=MCParams(n_scenarios=3, dt=30.0, seed=5))
+with warnings.catch_warnings(record=True) as wlog:
+    warnings.simplefilter("always")
+    c = evaluate_fleet(["J8"], ["burst-hads"], procs[:1], shard=True,
+                       **kw3)
+assert any("padded" in str(x.message) for x in wlog), wlog
+d = evaluate_fleet(["J8"], ["burst-hads"], procs[:1], shard=False, **kw3)
+assert c.sharded and c.rows[0]["s"] == 3
+np.testing.assert_allclose(c.rows[0]["cost"]["mean"],
+                           d.rows[0]["cost"]["mean"], rtol=1e-6)
+assert c.slots_total == d.slots_total   # pad rows masked from coverage
 print("SHARD_OK", a.meta())
 """
 

@@ -69,6 +69,27 @@ def test_mc_vm_stats_masks_done_tasks():
     np.testing.assert_allclose(np.asarray(maxw), [[10.0, 5.0, 0.0]])
 
 
+def test_mc_vm_reduce_megabatch_pad_columns_stay_empty():
+    """The megabatch fused layout (sim.megabatch) hands the kernel
+    ``v = v_pad`` > the plan's real column count; as long as no task is
+    assigned past the real columns — the engine's invariant, asserted at
+    fusion time — every pad column's reductions are exactly zero, and
+    out-of-range columns still park on the reserved kernel pad lane."""
+    rng = np.random.default_rng(0)
+    v_real, v_pad = 5, 8
+    cols = jnp.asarray(rng.integers(0, v_real, (4, 16)), jnp.int32)
+    w = jnp.asarray(rng.uniform(1.0, 9.0, (4, 16)), jnp.float32)
+    load, cnt, maxw = mc_vm_reduce(cols, w, v=v_pad, interpret=True)
+    for name, x in (("load", load), ("cnt", cnt), ("maxw", maxw)):
+        assert not np.asarray(x)[:, v_real:].any(), name
+    # a stray out-of-range column is ignored, not misattributed
+    load2, cnt2, _ = mc_vm_reduce(cols.at[0, 0].set(v_pad + 3), w,
+                                  v=v_pad, interpret=True)
+    assert not np.asarray(cnt2)[:, v_real:].any()
+    np.testing.assert_allclose(np.asarray(cnt2).sum(),
+                               np.asarray(cnt).sum() - 1.0)
+
+
 # ---------------------------------------------------------- delta fitness
 def _fitness_problem(rng, b, v):
     e = jnp.asarray(rng.uniform(50, 400, (b, v)), jnp.float32)

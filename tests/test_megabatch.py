@@ -1,0 +1,167 @@
+"""Megabatch engine: grid fusion parity, budgeting, sharding, padding.
+
+The fused (cell, S) row axis must be invisible in the results: every
+row of ``evaluate_grid`` has to match the per-cell fleet pipeline
+(``evaluate_fleet``) — on this CPU the union-subset credit path makes
+the fused program numerically identical, so the parity check is exact
+up to f32 reduction-order (rtol 1e-6, same bound the fleet tests use).
+Sharding correctness runs in a subprocess with two forced host devices.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.ils import ILSParams
+from repro.core.ils_jax import BatchedILSParams
+from repro.core.types import CloudConfig
+from repro.sim.fleet import evaluate_fleet
+from repro.sim.market import WeibullProcess, as_process
+from repro.sim.mc_engine import MCParams
+from repro.sim.megabatch import (B_MULT, SLOT_MULT, V_MULT, ScenarioBudget,
+                                 evaluate_grid)
+
+CFG = CloudConfig()
+FAST = ILSParams(max_iteration=8, max_attempt=8, seed=3)
+BFAST = BatchedILSParams(iterations=8, seed=3)
+PARAMS = MCParams(n_scenarios=8, dt=30.0, seed=5)
+PROCS = ["sc5", WeibullProcess(shape_h=0.7, scale_h=900.0, name="wb")]
+#: J12/J16 share the B_MULT=16 bucket, so same-view cells of *different*
+#: plans genuinely fuse through the row-parametric engine layout
+JOBS = ["J12", "J16"]
+POLS = ["burst-hads", "hads+burst"]
+KW = dict(cfg=CFG, ils_params=FAST, plan_engine="batched",
+          batched_ils=BFAST)
+
+
+@pytest.fixture(scope="module")
+def pair():
+    grid = evaluate_grid(JOBS, POLS, PROCS, params=PARAMS, **KW)
+    fleet = evaluate_fleet(JOBS, POLS, PROCS, params=PARAMS, **KW)
+    return grid, fleet
+
+
+def test_rows_match_fleet_pipeline(pair):
+    grid, fleet = pair
+    assert len(grid.rows) == len(fleet.rows) == 2 * 2 * 2
+    for g, f in zip(grid.rows, fleet.rows):
+        assert (g["job"], g["policy"], g["process"]) == \
+            (f["job"], f["policy"], f["process"])
+        assert g["s"] == f["s"] and g["n_vms"] == f["n_vms"]
+        # result statistics: same numbers the per-cell pipeline produces
+        for k in ("deadline_met_frac", "unfinished_frac",
+                  "mean_hibernations", "mean_resumes"):
+            np.testing.assert_allclose(g[k], f[k], rtol=1e-6, err_msg=k)
+        for k in ("cost", "makespan"):
+            for st, val in f[k].items():
+                np.testing.assert_allclose(g[k][st], val, rtol=1e-6,
+                                           err_msg=f"{k}.{st}")
+        # skip-frac is a diagnostic, not a statistic: a fused row only
+        # jumps to its horizon while the group is still live, so the
+        # fraction can differ slightly from the standalone run's
+        assert 0.0 <= g["slots_skipped_frac"] <= 1.0
+
+
+def test_fuses_cells_into_few_calls(pair):
+    grid, _ = pair
+    n_cells = len(JOBS) * len(POLS) * len(PROCS)
+    assert grid.engine == "megabatch"
+    # one call per (engine_view, shape bucket) group, never per cell
+    assert grid.n_engine_calls == grid.n_groups < n_cells
+    meta = grid.meta()
+    assert meta["engine"] == "megabatch"
+    assert meta["n_engine_calls"] == grid.n_engine_calls
+    assert meta["budget"] is None
+
+
+def test_budgeted_runs_are_deterministic():
+    bud = ScenarioBudget(chunk=4, max_scenarios=12, rel_ci95=0.25,
+                        min_chunks=2)
+    a = evaluate_grid(["J12"], POLS, PROCS, params=PARAMS, budget=bud,
+                      **KW)
+    b = evaluate_grid(["J12"], POLS, PROCS, params=PARAMS, budget=bud,
+                      **KW)
+    assert a.budget == dataclasses.asdict(bud)
+    for ra, rb in zip(a.rows, b.rows):
+        assert ra == rb            # same stop points, same statistics
+        assert bud.chunk * bud.min_chunks <= ra["s"] <= bud.max_scenarios
+
+
+def test_event_tensor_pad():
+    ev = as_process("sc5").sample(jax.random.PRNGKey(0), s=3, n_slots=10,
+                                  v=4, dt=30.0, deadline_s=2700.0)
+    p = ev.pad(n_slots=SLOT_MULT, v=V_MULT)
+    assert p.hib_k.shape == (3, SLOT_MULT)
+    assert p.hib_u.shape == (3, SLOT_MULT, V_MULT)
+    # original slots/columns intact, pads event-free and score-opted-out
+    np.testing.assert_array_equal(p.hib_k[:, :10], ev.hib_k)
+    np.testing.assert_array_equal(p.res_u[:, :10, :4], ev.res_u)
+    assert not p.hib_k[:, 10:].any() and not p.res_k[:, 10:].any()
+    assert (p.hib_u[:, :, 4:] == -2.0).all()
+    from repro.sim.market import EventTensorError
+    with pytest.raises(EventTensorError):
+        ev.pad(n_slots=4)
+
+
+def test_api_fleet_backend_routes_through_megabatch():
+    from repro.api import sweep
+    rows = sweep(["J12"], POLS, PROCS, backend="fleet", mc=PARAMS,
+                 ils=FAST, batched_ils=BFAST)
+    ref = evaluate_grid(["J12"], POLS, PROCS, params=PARAMS, **KW)
+    assert len(rows) == len(ref.rows)
+    for r, f in zip(rows, ref.rows):
+        assert (r.job, r.policy, r.process) == \
+            (f["job"], f["policy"], f["process"])
+        np.testing.assert_allclose(r.cost["mean"], f["cost"]["mean"],
+                                   rtol=1e-6)
+
+
+MEGA_SHARD_SCRIPT = r"""
+import numpy as np
+import jax
+assert len(jax.devices()) == 2, jax.devices()
+from repro.core.ils import ILSParams
+from repro.sim.fleet import evaluate_fleet
+from repro.sim.market import WeibullProcess
+from repro.sim.mc_engine import MCParams
+from repro.sim.megabatch import evaluate_grid
+kw = dict(cfg=None, params=MCParams(n_scenarios=4, dt=30.0, seed=5),
+          ils_params=ILSParams(max_iteration=4, max_attempt=4, seed=3))
+procs = ["sc5", WeibullProcess(shape_h=0.7, scale_h=900.0, name="wb")]
+jobs, pols = ["J8", "J12"], ["burst-hads"]
+g = evaluate_grid(jobs, pols, procs, **kw)       # fused (cell, S) mesh
+f = evaluate_fleet(jobs, pols, procs, **kw)      # per-cell pipeline
+assert g.sharded and g.n_devices == 2
+for rg, rf in zip(g.rows, f.rows):
+    assert (rg["job"], rg["policy"], rg["process"]) == \
+        (rf["job"], rf["policy"], rf["process"])
+    np.testing.assert_allclose(rg["cost"]["mean"], rf["cost"]["mean"],
+                               rtol=1e-6)
+    np.testing.assert_allclose(rg["makespan"]["mean"],
+                               rf["makespan"]["mean"], rtol=1e-6)
+    assert rg["mean_hibernations"] == rf["mean_hibernations"]
+print("MEGA_SHARD_OK", g.meta())
+"""
+
+
+def test_megabatch_matches_per_cell_on_two_devices():
+    """The fused (cell, S) row axis shards across a forced 2-device mesh
+    — splitting whole cells first, scenarios within a cell second — and
+    every row still matches the per-cell pipeline (subprocess: device
+    count is frozen at jax import)."""
+    env = dict(os.environ,
+               XLA_FLAGS=(os.environ.get("XLA_FLAGS", "") +
+                          " --xla_force_host_platform_device_count=2"),
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH="src" + os.pathsep +
+                          os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", MEGA_SHARD_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=600,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "MEGA_SHARD_OK" in out.stdout
