@@ -25,6 +25,7 @@ contract lives in tests/test_stepping.py).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -42,13 +43,20 @@ from repro.sim.workloads import make_job
 
 ILS_FAST = ILSParams(max_iteration=25, max_attempt=15, seed=3)
 
-#: Table V sc5 (the paper's headline), sc1 (sparse Poisson) and a bursty
-#: sub-exponential Weibull — the sparse regimes of DESIGN.md §2.5.
+#: Table V sc5 (the paper's headline), sc1 (sparse Poisson), a bursty
+#: sub-exponential Weibull — the sparse regimes of DESIGN.md §2.5 — and
+#: sc5 with half its interruptions escalated to spot *terminations*
+#: (§2.8): the terminating cell times the term-direction program (gated
+#: at trace time, so the other cells still compile the historical
+#: two-direction program) and tracks its throughput in BENCH_dynamic.
 def process_grid(deadline_s: float) -> list:
-    return [as_process("sc5"), as_process("sc1"),
+    sc5 = as_process("sc5")
+    return [sc5, as_process("sc1"),
             WeibullProcess(shape_h=0.7, scale_h=deadline_s / 3.0,
                            shape_r=1.0, scale_r=deadline_s / 2.5,
-                           name="weibull")]
+                           name="weibull"),
+            dataclasses.replace(sc5, termination_frac=0.5,
+                                name="sc5-term")]
 
 
 def _time_engine(job, plan, cfg, ev, params, reps: int):
@@ -116,6 +124,9 @@ def run(job_name: str = "J60",
                             round(float(r_ad.deadline_met.mean()), 3),
                         "mc_hib_mean":
                             round(float(r_ad.n_hibernations.mean()), 2),
+                        "mc_term_mean":
+                            round(float(r_ad.n_terminations.mean()), 2)
+                            if r_ad.n_terminations is not None else 0.0,
                     }
                     if des is not None:
                         row.update({

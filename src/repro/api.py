@@ -47,7 +47,8 @@ from repro.core.ils import ILSParams
 from repro.core.ils_jax import BatchedILSParams
 from repro.core.types import CloudConfig, Job
 from repro.sim.events import Scenario
-from repro.sim.market import EventTensor, PoissonProcess, as_process
+from repro.sim.market import (EventTensor, PoissonProcess,
+                              TraceReplayProcess, as_process)
 from repro.sim.mc_engine import (MCParams, MCResult, dist_stats, run_mc,
                                  run_mc_events)
 from repro.sim.simulator import SimResult, Simulator
@@ -109,6 +110,7 @@ class Result:
     unfinished_frac: float
     mean_hibernations: float
     mean_resumes: float
+    mean_terminations: float = 0.0
     raw: Any = None
 
     def row(self) -> dict:
@@ -138,18 +140,21 @@ def _backend(name: str) -> str:
     return b
 
 
-def _as_scenario(spec) -> Scenario:
-    """DES traces replay numpy event lists — only Poisson/Table V
-    processes have one (DESIGN.md §2.4)."""
+def _as_scenario(spec):
+    """DES traces replay numpy event lists — Poisson/Table V processes
+    have one (DESIGN.md §2.4), and ``TraceReplayProcess`` is replayed
+    event-for-event (§2.8: the S=1 parity bridge).  Poisson processes
+    pass through as themselves so ``termination_frac`` survives (the
+    Simulator duck-types them as scenarios)."""
     if isinstance(spec, Scenario):
         return spec
     p = as_process(spec)
-    if isinstance(p, PoissonProcess):
-        return Scenario(p.name, p.k_h, p.k_r)
+    if isinstance(p, (PoissonProcess, TraceReplayProcess)):
+        return p
     raise TypeError(
-        f"backend='des' replays Table V / Poisson scenarios only, got "
-        f"{type(p).__name__} — use an MC backend for arbitrary market "
-        f"processes")
+        f"backend='des' replays Table V / Poisson scenarios and empirical "
+        f"traces only, got {type(p).__name__} — use an MC backend for "
+        f"arbitrary market processes")
 
 
 #: (cfg id, job identity, policy, ILS knobs, engine) -> (cfg, job, plan);
@@ -192,7 +197,9 @@ def _from_des(job: Job, pol: PolicyConfig, res: SimResult) -> Result:
                   deadline_met_frac=float(res.deadline_met),
                   unfinished_frac=float(res.unfinished > 0),
                   mean_hibernations=float(res.n_hibernations),
-                  mean_resumes=float(res.n_resumes), raw=res)
+                  mean_resumes=float(res.n_resumes),
+                  mean_terminations=float(
+                      getattr(res, "n_terminations", 0)), raw=res)
 
 
 def _from_mc(job: Job, backend: str, res: MCResult,
@@ -206,7 +213,11 @@ def _from_mc(job: Job, backend: str, res: MCResult,
                   deadline_met_frac=float(np.mean(res.deadline_met[sl])),
                   unfinished_frac=float(np.mean(res.unfinished[sl] > 0)),
                   mean_hibernations=float(np.mean(res.n_hibernations[sl])),
-                  mean_resumes=float(np.mean(res.n_resumes[sl])), raw=raw)
+                  mean_resumes=float(np.mean(res.n_resumes[sl])),
+                  mean_terminations=(
+                      0.0 if res.n_terminations is None
+                      else float(np.mean(res.n_terminations[sl]))),
+                  raw=raw)
 
 
 # ---------------------------------------------------------------------------
@@ -327,7 +338,9 @@ def _grid_results(jobs, pols, procs, cfg, mc, ils, batched_ils,
                    deadline_met_frac=r["deadline_met_frac"],
                    unfinished_frac=r["unfinished_frac"],
                    mean_hibernations=r["mean_hibernations"],
-                   mean_resumes=r["mean_resumes"]) for r in fr.rows]
+                   mean_resumes=r["mean_resumes"],
+                   mean_terminations=r.get("mean_terminations", 0.0))
+            for r in fr.rows]
 
 
 def _fused_cells(jobs, pols, procs_of, cfg, mc, ils, batched_ils, backend,

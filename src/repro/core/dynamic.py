@@ -18,11 +18,20 @@ first-class:
   ``"freeze"`` (tasks freeze in place *permanently*: the pure-optimist
   ablation point that only ever progresses again on resume);
 * ``work_stealing`` — Algorithm 5 at AC boundaries / on resume.
+* ``checkpoint``    — the FT-module checkpoint schedule (§2.8):
+  ``"periodic"`` (default, the paper's Daly-style uniform grid — the
+  historical engine behaviour), ``"off"`` (no checkpoints: no overhead
+  but a preemption/termination loses all progress) or ``"random"``
+  (per-task randomized intervals, arxiv 2601.14612, via
+  ``ft.checkpoint.randomized_checkpoint_count``).  This axis only
+  reshapes the plan *data* (total work + rollback grid); it is not part
+  of the canonical registry, ``engine_view`` or the jit key.
 
 Every lattice point is registered in ``POLICIES`` under a canonical
 ``planner+market+burst+hibernation+steal`` name and constructible from a
 compact spec via ``policy()`` — ``policy("hads+burst")`` is HADS with
-burstable allocation switched on.  The paper's three §IV frameworks are
+burstable allocation switched on, ``policy("hads+ckpt-off")`` the
+checkpoint-free ablation.  The paper's three §IV frameworks are
 registry *aliases* with byte-identical behaviour to the pre-lattice
 configs (pinned by ``tests/data/des_golden.json`` and
 ``tests/data/mc_golden.json``):
@@ -39,6 +48,7 @@ from __future__ import annotations
 import dataclasses
 import warnings
 
+from ..ft.checkpoint import CHECKPOINT_MODES
 from .burst_alloc import burst_allocation
 from .dspot import compute_dspot
 from .greedy import initial_solution
@@ -67,6 +77,7 @@ class PolicyConfig:
     burstables: bool = False
     hibernation: str = "migrate"
     work_stealing: bool = False
+    checkpoint: str = "periodic"
 
     # -- derived views consumed by the engines (the pre-lattice flags) --
     @property
@@ -134,6 +145,7 @@ def canonical_name(planner: str, market: Market, burstables: bool,
 def make_policy(planner: str = "ils-exact", market: Market = Market.SPOT,
                 burstables: bool = False, hibernation: str = "migrate",
                 work_stealing: bool = False,
+                checkpoint: str = "periodic",
                 name: str | None = None) -> PolicyConfig:
     """Validate + canonicalize one lattice point.
 
@@ -142,25 +154,34 @@ def make_policy(planner: str = "ils-exact", market: Market = Market.SPOT,
     behaviour, one registry point instead of three).  If the resulting
     axes are already registered, the registry instance is returned (one
     object per lattice point keeps the jit cache tight); ``name`` forces
-    a fresh instance under that name.
+    a fresh instance under that name.  A non-default ``checkpoint`` mode
+    always yields a fresh instance (named ``...+ckpt-<mode>``): the axis
+    stays out of the canonical registry because it only changes plan
+    data, never the engine program.
     """
     if planner not in PLANNERS:
         raise ValueError(f"unknown planner {planner!r} (one of {PLANNERS})")
     if hibernation not in HIBERNATION_MODES:
         raise ValueError(f"unknown hibernation mode {hibernation!r} "
                          f"(one of {HIBERNATION_MODES})")
+    if checkpoint not in CHECKPOINT_MODES:
+        raise ValueError(f"unknown checkpoint mode {checkpoint!r} "
+                         f"(one of {CHECKPOINT_MODES})")
     market = Market(market)
     if market == Market.ONDEMAND:
         hibernation = "migrate"
     axes = (planner, market, burstables, hibernation, work_stealing)
     if name is None:
-        hit = _BY_AXES.get(axes)
-        if hit is not None:
-            return hit
-        name = canonical_name(*axes)
+        if checkpoint == "periodic":
+            hit = _BY_AXES.get(axes)
+            if hit is not None:
+                return hit
+            name = canonical_name(*axes)
+        else:
+            name = canonical_name(*axes) + f"+ckpt-{checkpoint}"
     return PolicyConfig(name, planner=planner, market=market,
                         burstables=burstables, hibernation=hibernation,
-                        work_stealing=work_stealing)
+                        work_stealing=work_stealing, checkpoint=checkpoint)
 
 
 # --- the paper's three §IV frameworks, as lattice aliases ----------------
@@ -214,6 +235,9 @@ _TOKENS: dict[str, tuple[str, object]] = {
     "freeze": ("hibernation", "freeze"),
     "steal": ("work_stealing", True),
     "nosteal": ("work_stealing", False),
+    "ckpt-periodic": ("checkpoint", "periodic"),
+    "ckpt-off": ("checkpoint", "off"),
+    "ckpt-random": ("checkpoint", "random"),
 }
 
 
@@ -242,13 +266,14 @@ def policy(spec: "str | PolicyConfig") -> PolicyConfig:
         raise ValueError("empty policy spec")
     axes = {"planner": "ils-exact", "market": Market.SPOT,
             "burstables": False, "hibernation": "migrate",
-            "work_stealing": False}
+            "work_stealing": False, "checkpoint": "periodic"}
     if tokens[0] in POLICIES:
         base = POLICIES[tokens[0]]
         axes = {"planner": base.planner, "market": base.market,
                 "burstables": base.burstables,
                 "hibernation": base.hibernation,
-                "work_stealing": base.work_stealing}
+                "work_stealing": base.work_stealing,
+                "checkpoint": base.checkpoint}
         tokens = tokens[1:]
     for tok in tokens:
         if tok not in _TOKENS:

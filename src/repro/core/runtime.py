@@ -42,10 +42,17 @@ class TaskRun:
     checkpoint overhead budget ``ovh`` (paper §IV: ovh = 10%).  ``done_base``
     only ever advances to checkpoint boundaries (or to completion), which is
     exactly what survives a hibernation/migration.
+
+    ``ckpt`` is the policy lattice's checkpoint axis
+    (``core.dynamic.PolicyConfig.checkpoint``): ``"periodic"`` (default,
+    the historical Daly grid), ``"off"`` (no checkpoints: no overhead,
+    preemption loses all progress) or ``"random"`` (per-task randomized
+    intervals, ``ft.checkpoint.randomized_checkpoint_count``).
     """
 
     spec: TaskSpec
     ovh: float = 0.10
+    ckpt: str = "periodic"
     state: TaskState = TaskState.PENDING
     vm_uid: int = -1
     mode: ExecMode = ExecMode.FULL
@@ -60,11 +67,22 @@ class TaskRun:
 
     @property
     def total_base(self) -> float:
+        if self.ckpt == "off":
+            return self.spec.base_time
         return self.spec.base_time * (1.0 + self.ovh)
 
     @property
     def cp_period_base(self) -> float:
-        n_cp = max(1, int(self.ovh * self.spec.base_time / CHECKPOINT_WRITE_S))
+        if self.ckpt == "off":
+            return self.total_base   # no checkpoints: floor is always zero
+        if self.ckpt == "random":
+            from ..ft.checkpoint import randomized_checkpoint_count
+            n_cp = int(randomized_checkpoint_count(
+                self.spec.base_time, self.ovh, write_s=CHECKPOINT_WRITE_S,
+                tids=self.spec.tid))
+        else:
+            n_cp = max(1, int(self.ovh * self.spec.base_time
+                              / CHECKPOINT_WRITE_S))
         return self.total_base / (n_cp + 1)
 
     @property
@@ -168,6 +186,35 @@ class VMRuntime:
         self.accrue(now)
         self.state = VMState.TERMINATED
         self.terminated_at = now
+
+    def fail(self, now: float) -> list[TaskRun]:
+        """Spot termination (§2.8): the provider reclaims the VM with its
+        memory lost.  Billing stops permanently, every unfinished task rolls
+        back to its last checkpoint floor, and the affected tasks are
+        returned for immediate re-entry into Alg. 4 migration — unlike
+        hibernation, there is no state to freeze in place, so deferred
+        migration is never an option."""
+        self.accrue(now)
+        self.state = VMState.TERMINATED
+        self.terminated_at = now
+        affected: list[TaskRun] = []
+        for t in list(self.running.values()):
+            t.preempt(now)
+            affected.append(t)
+        self.running.clear()
+        for t in self.queue:
+            t.epoch += 1
+            t.state = TaskState.PENDING
+            t.vm_uid = -1
+            affected.append(t)
+        self.queue.clear()
+        for t in self.frozen:
+            t.vm_uid = -1
+            t.done_base = math.floor(t.done_base / t.cp_period_base) \
+                * t.cp_period_base
+            affected.append(t)
+        self.frozen = []
+        return affected
 
     def hibernate(self, now: float, freeze_in_place: bool = False
                   ) -> list[TaskRun]:

@@ -1,1 +1,2 @@
-from .checkpoint import CheckpointManager, ovh_checkpoint_period  # noqa: F401
+from .checkpoint import (CHECKPOINT_MODES, CheckpointManager,  # noqa: F401
+                         checkpoint_schedule, ovh_checkpoint_period)

@@ -23,6 +23,7 @@ class EventKind(enum.Enum):
     TASK_DONE = "task_done"
     HIBERNATE = "hibernate"
     RESUME = "resume"
+    TERMINATE = "terminate"        # spot termination — state lost (§2.8)
     AC_CHECK = "ac_check"
     DEFERRED_MIGRATION = "deferred_migration"
 
@@ -73,10 +74,12 @@ SCENARIOS = {s.name: s for s in (SC_NONE, SC1, SC2, SC3, SC4, SC5)}
 
 
 def sample_market_events(scenario: Scenario, horizon_s: float,
-                         rng: np.random.Generator
+                         rng: np.random.Generator,
+                         termination_frac: float = 0.0
                          ) -> list[tuple[float, EventKind]]:
     """Delegates to ``sim.market.sample_market_events`` (single source of
     truth for market-event sampling; lazy import avoids the circular
     dependency — ``market`` imports ``Scenario`` from this module)."""
     from .market import sample_market_events as _impl
-    return _impl(scenario, horizon_s, rng)
+    return _impl(scenario, horizon_s, rng,
+                 termination_frac=termination_frac)

@@ -140,7 +140,12 @@ def pad_scenarios(ev: EventTensor, n_rows: int) -> EventTensor:
                        jnp.pad(ev.hib_u, pad_u, constant_values=-2.0),
                        jnp.pad(ev.res_k, pad_k),
                        jnp.pad(ev.res_u, pad_u, constant_values=-2.0),
-                       None)
+                       None,
+                       None if ev.term_k is None
+                       else jnp.pad(ev.term_k, pad_k),
+                       None if ev.term_u is None
+                       else jnp.pad(ev.term_u, pad_u,
+                                    constant_values=-2.0))
 
 
 def slot_coverage(res, sl: slice) -> tuple[int, int]:
@@ -165,7 +170,11 @@ def shard_events(ev: EventTensor, sharding) -> EventTensor:
                        jax.device_put(ev.res_k, sharding),
                        jax.device_put(ev.res_u, s3),
                        None if ev.nxt is None
-                       else jax.device_put(ev.nxt, sharding))
+                       else jax.device_put(ev.nxt, sharding),
+                       None if ev.term_k is None
+                       else jax.device_put(ev.term_k, sharding),
+                       None if ev.term_u is None
+                       else jax.device_put(ev.term_u, s3))
 
 
 def sample_grid_events(job: Job, plan, processes, params: MCParams
@@ -258,6 +267,9 @@ def evaluate_fleet(jobs, policies, processes,
                     "mean_hibernations":
                         float(np.mean(res.n_hibernations[sl])),
                     "mean_resumes": float(np.mean(res.n_resumes[sl])),
+                    "mean_terminations": (
+                        0.0 if res.n_terminations is None
+                        else float(np.mean(res.n_terminations[sl]))),
                     # per-cell share of the event-horizon win: fraction
                     # of this slice's scenario-slots jumped in closed
                     # form — same slot_coverage formula as the aggregate

@@ -23,6 +23,15 @@ draws a random active spot VM at fire time:
   Higher wins; a **negative score opts the column out** even when rank
   would select it (how shocks and explicit-VM traces bound their target
   set); ties break toward the lower column index.
+* ``term_k``/``term_u`` — the optional third event direction (DESIGN.md
+  §2.8): spot *terminations*, which lose the column's state instead of
+  preserving it.  ``None`` on both (the default) means "no termination
+  events" and compiles the engine to exactly the two-direction program;
+  every process grows a ``termination_frac`` knob that Bernoulli-converts
+  hibernation request slots into termination requests.  When a terminate
+  and a hibernate request collide on one slot the engine resolves the
+  terminations first (terminate wins the column; the hibernation falls
+  to the remaining eligible set, ties toward the lower column index).
 
 ``PoissonProcess`` reproduces the engine's pre-tensor inline sampling
 bit-for-bit (same key-split schedule, same uniforms, same victim choice),
@@ -52,6 +61,10 @@ class EventTensorError(ValueError):
     pass
 
 
+#: event-kind vocabulary of the tensor contract (trace replay / CSV)
+ALLOWED_EVENT_KINDS = ("hibernate", "resume", "terminate")
+
+
 @dataclasses.dataclass(frozen=True)
 class EventTensor:
     """Pregenerated market events for S scenarios × N slots × V columns.
@@ -68,6 +81,8 @@ class EventTensor:
     res_k: jax.Array   # int32 [S, N]  beneficiaries requested per slot
     res_u: jax.Array   # f32 [S, N, V] beneficiary priority scores
     nxt: jax.Array | None = None   # int32 [S, N] next nonzero event slot
+    term_k: jax.Array | None = None  # int32 [S, N] terminations requested
+    term_u: jax.Array | None = None  # f32 [S, N, V] termination scores
 
     @property
     def n_scenarios(self) -> int:
@@ -81,13 +96,23 @@ class EventTensor:
     def n_vms(self) -> int:
         return self.hib_u.shape[2]
 
+    @property
+    def has_terminations(self) -> bool:
+        """Whether the optional terminate direction is materialized; the
+        engine branches on this at trace time, so two-direction tensors
+        keep compiling to the exact pre-termination program."""
+        return self.term_k is not None
+
     def with_index(self) -> "EventTensor":
         """Return the same tensor with ``nxt`` populated (no-op when it
-        already is) — one reverse-cummin pass over the request counts."""
+        already is) — one reverse-cummin pass over the request counts.
+        Termination slots count as events: the jump lattice must never
+        skip a terminate (DESIGN.md §2.8)."""
         if self.nxt is not None:
             return self
         return dataclasses.replace(
-            self, nxt=_next_event_index(self.hib_k, self.res_k))
+            self, nxt=_next_event_index(self.hib_k, self.res_k,
+                                        self.term_k))
 
     def validate(self) -> "EventTensor":
         s, n, v = self.n_scenarios, self.n_slots, self.n_vms
@@ -95,6 +120,12 @@ class EventTensor:
                   "res_k": (s, n), "res_u": (s, n, v)}
         if self.nxt is not None:
             shapes["nxt"] = (s, n)
+        if (self.term_k is None) != (self.term_u is None):
+            raise EventTensorError(
+                "term_k and term_u must be both set or both None")
+        if self.term_k is not None:
+            shapes["term_k"] = (s, n)
+            shapes["term_u"] = (s, n, v)
         for name, want in shapes.items():
             a = getattr(self, name)
             if tuple(a.shape) != want:
@@ -133,7 +164,10 @@ class EventTensor:
             jnp.pad(self.hib_u, pad_u, constant_values=-2.0),
             jnp.pad(self.res_k, pad_k),
             jnp.pad(self.res_u, pad_u, constant_values=-2.0),
-            None)
+            None,
+            None if self.term_k is None else jnp.pad(self.term_k, pad_k),
+            None if self.term_u is None else
+            jnp.pad(self.term_u, pad_u, constant_values=-2.0))
 
     @staticmethod
     def concat(tensors: "list[EventTensor]") -> "EventTensor":
@@ -151,27 +185,42 @@ class EventTensor:
         nxt = None
         if all(t.nxt is not None for t in tensors):
             nxt = jnp.concatenate([t.nxt for t in tensors], axis=0)
+        term_k = term_u = None
+        if any(t.term_k is not None for t in tensors):
+            # mixed groups (fleet/megabatch fusing terminating and
+            # non-terminating processes): widen the termination-free
+            # tensors with inert zero requests / opt-out scores
+            term_k = jnp.concatenate(
+                [t.term_k if t.term_k is not None else
+                 jnp.zeros_like(t.hib_k) for t in tensors], axis=0)
+            term_u = jnp.concatenate(
+                [t.term_u if t.term_u is not None else
+                 jnp.full_like(t.hib_u, -2.0) for t in tensors], axis=0)
         return EventTensor(
             jnp.concatenate([t.hib_k for t in tensors], axis=0),
             jnp.concatenate([t.hib_u for t in tensors], axis=0),
             jnp.concatenate([t.res_k for t in tensors], axis=0),
             jnp.concatenate([t.res_u for t in tensors], axis=0),
-            nxt)
+            nxt, term_k, term_u)
 
 
 jax.tree_util.register_pytree_node(
     EventTensor,
-    lambda t: ((t.hib_k, t.hib_u, t.res_k, t.res_u, t.nxt), None),
+    lambda t: ((t.hib_k, t.hib_u, t.res_k, t.res_u, t.nxt, t.term_k,
+                t.term_u), None),
     lambda _, c: EventTensor(*c))
 
 
 @jax.jit
-def _next_event_index(hib_k: jax.Array, res_k: jax.Array) -> jax.Array:
+def _next_event_index(hib_k: jax.Array, res_k: jax.Array,
+                      term_k: jax.Array | None = None) -> jax.Array:
     """int32 [S, N] pointer to the next slot >= i with any nonzero event
-    request (hibernation or resume); ``n_slots`` when none remain.  One
-    reverse cumulative-min pass, built once per tensor."""
+    request (hibernation, resume or termination); ``n_slots`` when none
+    remain.  One reverse cumulative-min pass, built once per tensor."""
     s, n = hib_k.shape
     has = (hib_k > 0) | (res_k > 0)
+    if term_k is not None:
+        has = has | (term_k > 0)
     idx = jnp.where(has, jnp.arange(n, dtype=jnp.int32)[None], jnp.int32(n))
     return jax.lax.cummin(idx, axis=1, reverse=True)
 
@@ -204,8 +253,20 @@ class MarketProcess:
 
     def sample(self, key, *, s: int, n_slots: int, v: int, dt: float,
                deadline_s: float) -> EventTensor:
+        frac = float(getattr(self, "termination_frac", 0.0) or 0.0)
+        if not 0.0 <= frac <= 1.0:
+            raise EventTensorError(
+                f"termination_frac={frac} must lie in [0, 1]")
+        kt = None
+        if frac > 0.0:
+            # split off the conversion key *before* sampling so the
+            # frac == 0 path hands ``_sample`` the caller's key untouched
+            # — the Poisson bit-parity pin depends on that schedule
+            key, kt = jax.random.split(key)
         ev = self._sample(key, s=s, n_slots=n_slots, v=v, dt=dt,
                           deadline_s=deadline_s)
+        if frac > 0.0:
+            ev = _split_terminations(ev, kt, frac)
         return ev.with_index()
 
     def _sample(self, key, *, s: int, n_slots: int, v: int, dt: float,
@@ -216,6 +277,30 @@ class MarketProcess:
 def _uniform_scores(key, s: int, n: int, v: int) -> jax.Array:
     """IID priority scores — 'uniform random victim among eligible'."""
     return jax.random.uniform(key, (s, n, v))
+
+
+def _split_terminations(ev: EventTensor, key, frac: float) -> EventTensor:
+    """Convert each hibernation-request slot into a termination request
+    with probability ``frac`` — the terminate-vs-hibernate mix behind
+    every process's ``termination_frac`` knob (DESIGN.md §2.8).
+
+    The conversion is slot-level Bernoulli and keeps the hibernation
+    victim scores, so the victim *distribution* is untouched; explicit
+    terminations already on the tensor (trace replay) are preserved, and
+    on the rare slot carrying both, the explicit termination's scores
+    win (its targets stay bounded)."""
+    u = jax.random.uniform(key, ev.hib_k.shape)
+    conv = (u < frac) & (ev.hib_k > 0)
+    moved = jnp.where(conv, ev.hib_k, 0).astype(jnp.int32)
+    hib_k = jnp.where(conv, 0, ev.hib_k).astype(jnp.int32)
+    if ev.term_k is None:
+        term_k, term_u = moved, ev.hib_u
+    else:
+        term_k = ev.term_k + moved
+        keep = (ev.term_k > 0) | ~conv
+        term_u = jnp.where(keep[:, :, None], ev.term_u, ev.hib_u)
+    return dataclasses.replace(ev, hib_k=hib_k, term_k=term_k,
+                               term_u=term_u, nxt=None)
 
 
 def _slot_counts(times: jax.Array, n: int, dt: float,
@@ -269,6 +354,7 @@ class PoissonProcess(MarketProcess):
     k_h: float
     k_r: float
     name: str = "poisson"
+    termination_frac: float = 0.0
 
     @classmethod
     def from_scenario(cls, sc: Scenario) -> "PoissonProcess":
@@ -301,6 +387,7 @@ class WeibullProcess(MarketProcess):
     shape_r: float = 1.0
     scale_r: float = 0.0
     name: str = "weibull"
+    termination_frac: float = 0.0
 
     def mean_interarrival(self, which: str = "h") -> float:
         shape, scale = ((self.shape_h, self.scale_h) if which == "h"
@@ -348,6 +435,7 @@ class MarkovModulatedProcess(MarketProcess):
     mean_calm_s: float = 1500.0
     mean_turb_s: float = 300.0
     name: str = "mmpp"
+    termination_frac: float = 0.0
 
     def _sample(self, key, *, s, n_slots, v, dt, deadline_s) -> EventTensor:
         p_ct = min(1.0, dt / self.mean_calm_s)
@@ -407,6 +495,7 @@ class CorrelatedShockProcess(MarketProcess):
     k_r_recovery: float = 0.0
     recovery_s: float = 600.0
     name: str = "shock"
+    termination_frac: float = 0.0
 
     def _sample(self, key, *, s, n_slots, v, dt, deadline_s) -> EventTensor:
         p_shock = min(1.0, self.k_shock * dt / deadline_s)
@@ -456,8 +545,8 @@ class CorrelatedShockProcess(MarketProcess):
 class TraceReplayProcess(MarketProcess):
     """Replay an empirical interruption trace across all S scenarios.
 
-    Events are ``(time_s, kind, vm)`` with ``kind`` ∈ {hibernate, resume}
-    and ``vm`` a plan column index or -1 for "any eligible column, chosen
+    Events are ``(time_s, kind, vm)`` with ``kind`` ∈ {hibernate, resume,
+    terminate} and ``vm`` a plan column index or -1 for "any eligible column, chosen
     at fire time" (per-scenario random, like the DES).  An explicit-vm
     event whose column is ineligible at fire time is *skipped*, exactly
     like the DES; to keep that guarantee expressible in the tensor's
@@ -473,13 +562,16 @@ class TraceReplayProcess(MarketProcess):
     kinds: tuple[str, ...]
     vms: tuple[int, ...]
     name: str = "trace"
+    termination_frac: float = 0.0
 
     def __post_init__(self):
         if not (len(self.times) == len(self.kinds) == len(self.vms)):
             raise EventTensorError("times/kinds/vms length mismatch")
-        bad = set(self.kinds) - {"hibernate", "resume"}
+        bad = set(self.kinds) - set(ALLOWED_EVENT_KINDS)
         if bad:
-            raise EventTensorError(f"unknown event kinds {sorted(bad)}")
+            raise EventTensorError(
+                f"unknown event kinds {sorted(bad)}; allowed kinds are "
+                f"{sorted(ALLOWED_EVENT_KINDS)}")
 
     @classmethod
     def from_events(cls, events, name: str = "trace"
@@ -501,6 +593,13 @@ class TraceReplayProcess(MarketProcess):
                  ) -> "TraceReplayProcess":
         with open(path, newline="") as f:
             rows = list(csv.DictReader(f))
+        # validate kinds *before* the tensor build so a bad trace fails
+        # with the offending file row (header is row 1)
+        for i, r in enumerate(rows, start=2):
+            if r.get("kind") not in ALLOWED_EVENT_KINDS:
+                raise EventTensorError(
+                    f"{path} row {i}: unknown event kind {r.get('kind')!r}"
+                    f"; allowed kinds are {sorted(ALLOWED_EVENT_KINDS)}")
         return cls.from_events(
             [(float(r["time_s"]), r["kind"], int(r.get("vm", -1) or -1))
              for r in rows],
@@ -514,14 +613,15 @@ class TraceReplayProcess(MarketProcess):
                 w.writerow([repr(t), k, vm])
 
     def _sample(self, key, *, s, n_slots, v, dt, deadline_s) -> EventTensor:
-        counts = np.zeros((2, n_slots), np.int32)
-        expl = np.full((2, n_slots, v), False)       # explicit-vm targets
-        anon = np.zeros((2, n_slots), np.int64)      # anonymous event count
+        counts = np.zeros((3, n_slots), np.int32)
+        expl = np.full((3, n_slots, v), False)       # explicit-vm targets
+        anon = np.zeros((3, n_slots), np.int64)      # anonymous event count
+        direction = {"hibernate": 0, "resume": 1, "terminate": 2}
         for t, kind, vm in zip(self.times, self.kinds, self.vms):
             n = int(t // dt)
             if not (0.0 <= t < deadline_s and n < n_slots):
                 continue
-            d = 0 if kind == "hibernate" else 1
+            d = direction[kind]
             if vm >= v:
                 raise EventTensorError(
                     f"trace names column {vm}, plan has {v}")
@@ -542,7 +642,7 @@ class TraceReplayProcess(MarketProcess):
                 expl[d, n, vm] = True
             else:
                 anon[d, n] += 1
-        hk, rk = counts[0], counts[1]
+        hk, rk, tk = counts[0], counts[1], counts[2]
 
         def scores(k, d):
             u = jax.random.uniform(k, (s, n_slots, v))
@@ -553,8 +653,14 @@ class TraceReplayProcess(MarketProcess):
             return jnp.where(e, 2.0, jnp.where(has_anon, u, u - 2.0)
                              ).astype(jnp.float32)
 
-        k1, k2 = jax.random.split(key)
         tile = lambda a: jnp.tile(jnp.asarray(a)[None], (s, 1))
+        if tk.any():
+            # terminate-free traces keep the historical 2-way key split,
+            # so their tensors stay bit-identical per seed
+            k1, k2, k3 = jax.random.split(key, 3)
+            return EventTensor(tile(hk), scores(k1, 0), tile(rk),
+                               scores(k2, 1), None, tile(tk), scores(k3, 2))
+        k1, k2 = jax.random.split(key)
         return EventTensor(tile(hk), scores(k1, 0), tile(rk), scores(k2, 1))
 
 
@@ -596,7 +702,8 @@ def as_process(spec) -> MarketProcess:
 # DES event-list sampler (single source of truth; sim.events delegates)
 # ---------------------------------------------------------------------------
 def sample_market_events(scenario: Scenario, horizon_s: float,
-                         rng: np.random.Generator
+                         rng: np.random.Generator,
+                         termination_frac: float = 0.0
                          ) -> list[tuple[float, EventKind]]:
     """Poisson processes with rates k_h/D and k_r/D over [0, D] — the
     numpy event-list form consumed by the discrete-event simulator.
@@ -606,6 +713,11 @@ def sample_market_events(scenario: Scenario, horizon_s: float,
     eligible VM are skipped, which is why the realised counts in Table VI
     fall below k_h — our generator reproduces that behaviour.  The tensor
     form of the same process is ``PoissonProcess``.
+
+    ``termination_frac > 0`` Bernoulli-converts each hibernation into a
+    spot *termination* (state lost — DESIGN.md §2.8), mirroring the
+    tensor-side ``termination_frac`` knob; the frac == 0 path draws the
+    exact historical rng schedule, so DES trace goldens are preserved.
     """
     out: list[tuple[float, EventKind]] = []
     for k, kind in ((scenario.k_h, EventKind.HIBERNATE),
@@ -615,5 +727,10 @@ def sample_market_events(scenario: Scenario, horizon_s: float,
         n = rng.poisson(k)
         for t in rng.uniform(0.0, horizon_s, size=n):
             out.append((float(t), kind))
+    if termination_frac > 0.0:
+        out = [(t, EventKind.TERMINATE
+                if kind == EventKind.HIBERNATE and
+                rng.random() < termination_frac else kind)
+               for t, kind in out]
     out.sort()
     return out

@@ -90,6 +90,7 @@ from repro.core.fitness import pack_solution
 from repro.core.ils import ILSParams
 from repro.core.runtime import CHECKPOINT_WRITE_S
 from repro.core.types import CloudConfig, Job, Market
+from repro.ft.checkpoint import checkpoint_schedule
 from repro.kernels.sched_fitness.ops import mc_span_advance, mc_vm_stats
 from .events import SC_NONE, Scenario
 from .market import EventTensor, MarketProcess, as_process
@@ -155,6 +156,7 @@ class MCResult:
     n_steps: int = 0          # while-loop iterations
     exit_slots: np.ndarray | None = None  # int [S] per-scenario exit slot
     visited: np.ndarray | None = None     # bool [S, n_slots] stepped mask
+    n_terminations: np.ndarray | None = None  # int [S] spot terminations
 
     @property
     def n(self) -> int:
@@ -182,7 +184,10 @@ class MCResult:
                 "makespan": dist_stats(self.makespan),
                 "deadline_met_frac": float(np.mean(self.deadline_met)),
                 "mean_hibernations": float(np.mean(self.n_hibernations)),
-                "mean_resumes": float(np.mean(self.n_resumes))}
+                "mean_resumes": float(np.mean(self.n_resumes)),
+                "mean_terminations": (
+                    0.0 if self.n_terminations is None
+                    else float(np.mean(self.n_terminations)))}
 
 
 # ---------------------------------------------------------------------------
@@ -230,9 +235,11 @@ def _plan_arrays(job: Job, plan: PrimaryPlan, cfg: CloudConfig, ovh: float
     tasks = [job.tasks[int(i)] for i in perm]
 
     base = np.array([t.base_time for t in tasks], np.float64)
-    total = (base * (1.0 + ovh)).astype(np.float32)
-    n_cp = np.maximum(1, (ovh * base / CHECKPOINT_WRITE_S).astype(np.int64))
-    cp = (total / (n_cp + 1)).astype(np.float32)
+    # checkpoint-axis schedule (§2.8): "periodic" reproduces the historical
+    # Daly grid bit-for-bit; "off"/"random" reshape only this data
+    total, cp = checkpoint_schedule(
+        base, ovh, getattr(plan.policy, "checkpoint", "periodic"),
+        write_s=CHECKPOINT_WRITE_S, tids=[t.tid for t in tasks])
 
     vms = [pool[u] for u in uids]
     arr = {
@@ -432,6 +439,9 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
     rows = jnp.arange(s)
     bi = arr["burst_idx"]
     adaptive = stepping == "adaptive"
+    # trace-time gate: a termination-free tensor (term_k is None) compiles
+    # to exactly the historical pre-termination program (§2.8)
+    has_term = ev.term_k is not None
     n_slots = ev.hib_k.shape[1]
     # per-row deadline broadcasts against [S, V] work maxima in the
     # deferred-HADS safe-time rule; a scalar everywhere else
@@ -454,6 +464,7 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
         jnp.full((s, b), BIG, jnp.float32),                       # done_at
         jnp.zeros(s, jnp.int32),                                  # n_hib
         jnp.zeros(s, jnp.int32),                                  # n_res
+        jnp.zeros(s, jnp.int32),                                  # n_term
         jnp.int32(0),                                             # n_steps
         jnp.zeros((s, n_slots), bool),                            # visited
     )
@@ -466,7 +477,7 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
 
     def step(c):
         (i, vstate, boot, billed, credits, rem, assign, mode, done_at,
-         nhib, nres, nsteps, visited) = c
+         nhib, nres, nterm, nsteps, visited) = c
 
         pending = rem > 0.0
         # a row is live while it has pending work *inside* the horizon:
@@ -663,6 +674,8 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
             ir = jnp.minimum(i, n_slots - 1)
             hib_k, hib_u = ev.hib_k[rows, ir], ev.hib_u[rows, ir]
             res_k, res_u = ev.res_k[rows, ir], ev.res_u[rows, ir]
+            if has_term:
+                term_k, term_u = ev.term_k[rows, ir], ev.term_u[rows, ir]
         else:
             # lockstep slot walk: one dynamic slice, as before
             i0 = i[0]
@@ -674,6 +687,11 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
                                                  keepdims=False)
             res_u = jax.lax.dynamic_index_in_dim(ev.res_u, i0, 1,
                                                  keepdims=False)
+            if has_term:
+                term_k = jax.lax.dynamic_index_in_dim(ev.term_k, i0, 1,
+                                                      keepdims=False)
+                term_u = jax.lax.dynamic_index_in_dim(ev.term_u, i0, 1,
+                                                      keepdims=False)
 
         # ---- progress over [t, t + dt) ----------------------------------
         active = vstate == VM_ACTIVE
@@ -703,10 +721,44 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
 
         rcv = jnp.zeros((s, v), bool)      # columns given tasks this slot
 
+        # victims for both loss events: active, booted, spot columns
+        hib_elig = active & bc(spot) & (boot <= t1[:, None])
+
+        # ---- terminate events (§2.8): the provider reclaims the column —
+        # state lost.  Resolved BEFORE hibernation (terminate wins slot
+        # collisions) over the same eligible set; a terminated column is
+        # then excluded from this slot's hibernation picks.  Billing stops
+        # structurally: live requires VM_ACTIVE, and resume eligibility is
+        # VM_HIBERNATED, so a terminated column never bills or revives.
+        # Unfinished tasks roll back to the checkpoint floor and ALWAYS
+        # re-enter Alg. 4 migration — with memory lost there is no state
+        # to freeze in place, whatever the hibernation axis says.
+        if has_term:
+            trm = _select(term_u, hib_elig, term_k) & gate[:, None]
+            do_trm = jnp.any(trm, axis=1)
+            nterm = nterm + jnp.sum(trm, axis=1)
+            vstate = jnp.where(trm, VM_TERMINATED, vstate)
+            hib_elig = hib_elig & ~trm
+            aff_t = jnp.take_along_axis(trm, assign, axis=1) & (rem2 > 0)
+
+            def migt(ops):
+                rem2, assign, mode, vstate, boot, rcv = ops
+                load = mc_vm_stats(assign, rem2, v=v,
+                                   interpret=interpret)[0] \
+                    if use_kernel else col_sum(rem2 * (rem2 > 0))
+                return _migrate_spread(
+                    do_trm, aff_t, rem2, load, vstate, boot, credits,
+                    assign, mode, rcv, arr, sc, t1,
+                    allow_burstable=policy.use_burstables,
+                    rounds=mig_rounds)
+
+            (rem2, assign, mode, vstate, boot, rcv) = jax.lax.cond(
+                jnp.any(aff_t), migt, lambda ops: ops,
+                (rem2, assign, mode, vstate, boot, rcv))
+
         # ---- hibernation events (victims: requested count resolved
         # against the live eligible set — active, booted, spot) -----------
-        hib = _select(hib_u, active & bc(spot) &
-                      (boot <= t1[:, None]), hib_k) & \
+        hib = _select(hib_u, hib_elig, hib_k) & \
             gate[:, None]
         do_hib = jnp.any(hib, axis=1)
         nhib = nhib + jnp.sum(hib, axis=1)
@@ -827,18 +879,19 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
         # layout i == max_slots == n_slots was already out of range
         i_mark = jnp.where(i < sc["max_slots"], i, n_slots)
         return (jnp.minimum(i1, sc["max_slots"]), vstate, boot, billed,
-                credits, rem2, assign, mode, done_at, nhib, nres,
+                credits, rem2, assign, mode, done_at, nhib, nres, nterm,
                 nsteps + 1, visited.at[rows, i_mark].set(True, mode="drop"))
 
     out = jax.lax.while_loop(cond, step, carry)
-    (i_fin, _, _, billed, _, rem, _, _, done_at, nhib, nres, nsteps,
-     visited) = out
+    (i_fin, _, _, billed, _, rem, _, _, done_at, nhib, nres, nterm,
+     nsteps, visited) = out
     makespan = jnp.max(jnp.where(done_at < BIG * 0.5, done_at, 0.0), axis=1)
     return {"cost": jnp.sum(billed * bc(price), axis=1),
             "makespan": makespan,
             "unfinished": jnp.sum(rem > 0.0, axis=1),
             "billed": billed, "n_hib": nhib, "n_res": nres,
-            "n_steps": nsteps, "exit_slots": i_fin, "visited": visited}
+            "n_term": nterm, "n_steps": nsteps, "exit_slots": i_fin,
+            "visited": visited}
 
 
 @functools.lru_cache(maxsize=2)
@@ -963,7 +1016,8 @@ def run_mc_events(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
         n_resumes=out["n_res"].astype(int),
         billed_s=out["billed"], vm_uids=list(uids),
         stepping=params.stepping, n_steps=int(out["n_steps"]),
-        exit_slots=out["exit_slots"].astype(int), visited=out["visited"])
+        exit_slots=out["exit_slots"].astype(int), visited=out["visited"],
+        n_terminations=out["n_term"].astype(int))
 
 
 def run_mc(job: Job, plan: PrimaryPlan, cfg: CloudConfig,

@@ -121,6 +121,7 @@ class _Cell:
     unfinished: list = dataclasses.field(default_factory=list)
     nhib: list = dataclasses.field(default_factory=list)
     nres: list = dataclasses.field(default_factory=list)
+    nterm: list = dataclasses.field(default_factory=list)
     covered: int = 0
     stepped: int = 0
     done: bool = False
@@ -135,6 +136,7 @@ class _Cell:
         self.unfinished.append(out["unfinished"][sl].astype(int))
         self.nhib.append(out["n_hib"][sl].astype(int))
         self.nres.append(out["n_res"][sl].astype(int))
+        self.nterm.append(out["n_term"][sl].astype(int))
         self.covered += int(out["exit_slots"][sl].sum())
         self.stepped += int(out["visited"][sl].sum())
 
@@ -163,6 +165,8 @@ class _Cell:
                     float(np.mean(np.concatenate(self.nhib))),
                 "mean_resumes":
                     float(np.mean(np.concatenate(self.nres))),
+                "mean_terminations":
+                    float(np.mean(np.concatenate(self.nterm))),
                 "slots_skipped_frac": round(
                     1.0 - self.stepped / max(1, self.covered), 3)}
 

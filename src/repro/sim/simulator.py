@@ -54,14 +54,18 @@ class SimResult:
     unfinished: int
     per_vm_cost: dict[str, float]
     trace: list[str]
+    n_terminations: int = 0
 
 
 class Simulator:
     """One simulation run of (job, plan, policy, scenario)."""
 
     def __init__(self, job: Job, plan: PrimaryPlan, cfg: CloudConfig,
-                 scenario: Scenario = SC_NONE, seed: int = 0,
+                 scenario: "Scenario | object" = SC_NONE, seed: int = 0,
                  ovh: float = 0.10, keep_trace: bool = False):
+        # ``scenario`` is a Table V ``Scenario``, a duck-compatible
+        # ``market.PoissonProcess`` (k_h/k_r/termination_frac), or a
+        # ``market.TraceReplayProcess`` replayed event-for-event (§2.8)
         self.job = job
         self.plan = plan
         self.policy: PolicyConfig = plan.policy
@@ -76,13 +80,16 @@ class Simulator:
         self.trace: list[str] = []
 
         pool = plan.solution.pool
+        ckpt = getattr(plan.policy, "checkpoint", "periodic")
         self.cluster = Cluster(
             cfg=cfg,
             vms={vm.uid: VMRuntime(vm=vm, cfg=cfg) for vm in pool},
-            tasks={t.tid: TaskRun(spec=t, ovh=ovh) for t in job.tasks},
+            tasks={t.tid: TaskRun(spec=t, ovh=ovh, ckpt=ckpt)
+                   for t in job.tasks},
         )
         self._n_hib = 0
         self._n_res = 0
+        self._n_term = 0
         self._n_dyn_od = 0
         self._primary_uids = set(plan.solution.selected_uids)
         self._orphans: list[TaskRun] = []   # failed migrations awaiting retry
@@ -238,13 +245,32 @@ class Simulator:
         # §III-D: an idle VM work-steals at the *start of its next AC*
         # (the AC_CHECK handler performs the attempt).
 
-    def _on_hibernate(self, ev: Event) -> None:
+    def _spot_victim(self, ev: Event) -> VMRuntime | None:
+        """Victim of a hibernate/terminate event: an explicit ``uid``
+        payload (trace replay) targets that VM — skipped if it is not an
+        active spot VM right now, exactly like the tensor contract's
+        eligibility pass — while anonymous events draw a random active
+        spot VM.  Explicit events never consume rng, so Poisson trace
+        goldens are untouched."""
+        uid = ev.payload.get("uid", -1)
+        if uid is not None and uid >= 0:
+            vmrt = self.cluster.vms.get(uid)
+            if vmrt is None or vmrt.state not in (VMState.BUSY,
+                                                  VMState.IDLE) \
+                    or not vmrt.vm.is_spot:
+                return None
+            return vmrt
         candidates = [v for v in self.cluster.by_state(VMState.BUSY,
                                                        VMState.IDLE)
                       if v.vm.is_spot]
         if not candidates:
+            return None
+        return candidates[int(self.rng.integers(len(candidates)))]
+
+    def _on_hibernate(self, ev: Event) -> None:
+        vmrt = self._spot_victim(ev)
+        if vmrt is None:
             return
-        vmrt = candidates[int(self.rng.integers(len(candidates)))]
         self._n_hib += 1
         running_tids = [t.spec.tid for t in vmrt.running.values()]
         affected = vmrt.hibernate(self.now,
@@ -268,6 +294,27 @@ class Simulator:
                 self.log(f"defer migration of {vmrt.vm.name} to {t_safe:.0f}")
         # hibernation="freeze": tasks stay frozen on the column and only
         # ever progress again on resume — the pure-optimist lattice point
+
+    def _on_terminate(self, ev: Event) -> None:
+        """Spot termination (§2.8): like hibernation but the state is
+        lost — billing stops permanently and unfinished tasks roll back
+        to the checkpoint floor and ALWAYS re-enter Alg. 4 migration
+        (there is nothing left to freeze in place, whatever the
+        hibernation axis says)."""
+        vmrt = self._spot_victim(ev)
+        if vmrt is None:
+            return
+        self._n_term += 1
+        running_tids = [t.spec.tid for t in vmrt.running.values()]
+        affected = vmrt.fail(self.now)
+        for t in affected:
+            if t.spec.tid in running_tids:
+                self.records.append({"t": self.now, "ev": "preempt",
+                                     "tid": t.spec.tid, "vm": vmrt.vm.name,
+                                     "to_base": t.done_base})
+        self.log(f"TERMINATE {vmrt.vm.name} affected={len(affected)} "
+                 "(state lost)")
+        self._migrate(affected, self.policy.use_burstables)
 
     def _hads_latest_safe_time(self, vmrt: VMRuntime) -> float:
         """Latest instant at which migrating the frozen bag still meets D.
@@ -305,10 +352,16 @@ class Simulator:
         self._hads_migrate(vmrt)
 
     def _on_resume(self, ev: Event) -> None:
-        if not self.cluster.hibernated:
-            return
-        hib = sorted(self.cluster.hibernated, key=lambda v: v.vm.uid)
-        vmrt = hib[int(self.rng.integers(len(hib)))]
+        uid = ev.payload.get("uid", -1)
+        if uid is not None and uid >= 0:
+            vmrt = self.cluster.vms.get(uid)
+            if vmrt is None or vmrt.state != VMState.HIBERNATED:
+                return   # skipped, like the tensor eligibility pass
+        else:
+            if not self.cluster.hibernated:
+                return
+            hib = sorted(self.cluster.hibernated, key=lambda v: v.vm.uid)
+            vmrt = hib[int(self.rng.integers(len(hib)))]
         self._n_res += 1
         vmrt.resume(self.now)
         self.log(f"RESUME {vmrt.vm.name}")
@@ -338,18 +391,48 @@ class Simulator:
         self._retry_orphans()
 
     # ------------------------------------------------------------------
+    def _push_market_events(self) -> None:
+        """Queue this run's market events: a ``TraceReplayProcess``
+        replays its (time, kind, vm) records — explicit columns mapped to
+        VM uids via ``plan_column_uids``, the shared column order of the
+        MC engine (the S=1 parity bridge, §2.8) — while Table V scenarios
+        (or duck-compatible ``PoissonProcess`` instances, whose
+        ``termination_frac`` is forwarded) sample the Poisson lists."""
+        from .market import TraceReplayProcess
+        if isinstance(self.scenario, TraceReplayProcess):
+            from .mc_engine import plan_column_uids
+            uids = plan_column_uids(self.plan)
+            kind_of = {"hibernate": EventKind.HIBERNATE,
+                       "resume": EventKind.RESUME,
+                       "terminate": EventKind.TERMINATE}
+            frac = float(getattr(self.scenario, "termination_frac", 0.0))
+            for t, kind, vm in zip(self.scenario.times,
+                                   self.scenario.kinds, self.scenario.vms):
+                if not 0.0 <= t < self.deadline:
+                    continue   # the tensor sampler's event window
+                k = kind_of[kind]
+                if k == EventKind.HIBERNATE and frac > 0.0 and \
+                        self.rng.random() < frac:
+                    k = EventKind.TERMINATE
+                self.events.push(t, k, uid=(uids[vm] if vm >= 0 else -1))
+            return
+        frac = float(getattr(self.scenario, "termination_frac", 0.0))
+        for t, kind in sample_market_events(self.scenario, self.deadline,
+                                            self.rng,
+                                            termination_frac=frac):
+            self.events.push(t, kind)
+
     def run(self) -> SimResult:
         self._materialize_primary()
         horizon = self.deadline * 3.0
-        for t, kind in sample_market_events(self.scenario, self.deadline,
-                                            self.rng):
-            self.events.push(t, kind)
+        self._push_market_events()
 
         handlers = {
             EventKind.BOOT_DONE: self._on_boot_done,
             EventKind.TASK_DONE: self._on_task_done,
             EventKind.HIBERNATE: self._on_hibernate,
             EventKind.RESUME: self._on_resume,
+            EventKind.TERMINATE: self._on_terminate,
             EventKind.AC_CHECK: self._on_ac_check,
             EventKind.DEFERRED_MIGRATION: self._on_deferred_migration,
         }
@@ -376,6 +459,7 @@ class Simulator:
             deadline_met=(not unfinished) and makespan <= self.deadline + 1e-6,
             n_hibernations=self._n_hib, n_resumes=self._n_res,
             n_dynamic_ondemand=self._n_dyn_od, counters=dict(self.counters),
+            n_terminations=self._n_term,
             unfinished=len(unfinished),
             per_vm_cost={v.vm.name: v.cost for v in self.cluster.vms.values()
                          if v.cost > 0},

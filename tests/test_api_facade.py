@@ -29,7 +29,7 @@ API_SURFACE = ["BACKENDS", "BatchedILSParams", "CloudConfig", "Experiment",
 #: unified row schema every backend must produce
 ROW_KEYS = {"job", "policy", "process", "backend", "s", "dt", "cost",
             "makespan", "deadline_met_frac", "unfinished_frac",
-            "mean_hibernations", "mean_resumes"}
+            "mean_hibernations", "mean_resumes", "mean_terminations"}
 
 #: new lattice points (beyond the paper's three aliases) exercised
 #: end-to-end on every backend — the ISSUE 5 acceptance grid

@@ -91,6 +91,36 @@ def test_budgeted_runs_are_deterministic():
         assert bud.chunk * bud.min_chunks <= ra["s"] <= bud.max_scenarios
 
 
+def test_termination_cells_match_fleet_pipeline():
+    """A terminating process in the grid (§2.8) fuses like any other
+    cell: the megabatch rows must pin the per-cell fleet pipeline —
+    termination counts bit-exact, distributions to f32 tolerance — and
+    the termination-free neighbour cell in the same fused call must stay
+    terminate-free (the concat widening is billing-inert)."""
+    term = dataclasses.replace(WeibullProcess(shape_h=0.7, scale_h=900.0,
+                                              name="wb-term"),
+                               termination_frac=0.6)
+    procs = [term, "sc5"]
+    grid = evaluate_grid(["J12"], POLS, procs, params=PARAMS, **KW)
+    fleet = evaluate_fleet(["J12"], POLS, procs, params=PARAMS, **KW)
+    assert len(grid.rows) == len(fleet.rows) == 2 * 2
+    for g, f in zip(grid.rows, fleet.rows):
+        assert (g["job"], g["policy"], g["process"]) == \
+            (f["job"], f["policy"], f["process"])
+        assert g["mean_terminations"] == f["mean_terminations"]
+        for k in ("deadline_met_frac", "unfinished_frac",
+                  "mean_hibernations", "mean_resumes"):
+            np.testing.assert_allclose(g[k], f[k], rtol=1e-6, err_msg=k)
+        for k in ("cost", "makespan"):
+            for st, val in f[k].items():
+                np.testing.assert_allclose(g[k][st], val, rtol=1e-6,
+                                           err_msg=f"{k}.{st}")
+    by_proc = {r["process"]: r for r in grid.rows if r["policy"] ==
+               grid.rows[0]["policy"]}
+    assert by_proc["wb-term"]["mean_terminations"] > 0.0
+    assert by_proc["sc5"]["mean_terminations"] == 0.0
+
+
 def test_event_tensor_pad():
     ev = as_process("sc5").sample(jax.random.PRNGKey(0), s=3, n_slots=10,
                                   v=4, dt=30.0, deadline_s=2700.0)
