@@ -63,7 +63,8 @@ DYNAMIC_ROLLUP = os.path.join(os.path.dirname(__file__), "..",
 
 def dynamic_rollup(sim_rows: list[dict], smoke: bool,
                    outdir: str, lattice_rows: list[dict] = (),
-                   mega_rows: list[dict] = ()) -> list[dict]:
+                   mega_rows: list[dict] = (),
+                   service_rows: list[dict] = ()) -> list[dict]:
     """Headline dynamic-engine throughput per (job, policy, process, S,
     dt, stepping) + slots-skipped fraction, written to the root-level
     ``BENCH_dynamic.json`` and appended to ``results/trajectory.jsonl``
@@ -119,6 +120,23 @@ def dynamic_rollup(sim_rows: list[dict], smoke: bool,
                      "n_engine_calls": r["n_engine_calls"],
                      "n_groups": r["n_groups"],
                      "n_cells": r["n_cells"]})
+
+    # online service-mode rows (service_bench): streaming admission over
+    # the mid-horizon engine — `admitted` and `slo_met_frac` are the
+    # deterministic gate signals, the wall rates ride informationally
+    for r in service_rows:
+        if r.get("table") != "service":
+            continue
+        rows.append({"table": "service",
+                     **{k: r[k] for k in ("job", "policy", "process",
+                                          "s", "dt")},
+                     "stepping": "service",
+                     "scen_per_s": r["arrivals_per_wall_s"],
+                     "arrivals": r["arrivals"],
+                     "admitted": r["admitted"],
+                     "rejected": r["rejected"],
+                     "slo_met_frac": r["slo_met_frac"],
+                     "replan_p95_ms": r["replan_p95_ms"]})
 
     def key_of(row):
         return tuple(row.get(k) for k in ("job", "policy", "process",
@@ -182,7 +200,14 @@ def main() -> None:
     mega_rows = emit("megabatch",
                      fleet_bench.megabatch_smoke() if args.smoke
                      else fleet_bench.megabatch_grid(), fh)
-    dynamic_rollup(sim_rows, args.smoke, outdir, lattice_rows, mega_rows)
+
+    print("# Online service mode: streaming admission + rolling replans")
+    from benchmarks import service_bench
+    service_rows = emit("service",
+                        service_bench.smoke() if args.smoke
+                        else service_bench.run(), fh)
+    dynamic_rollup(sim_rows, args.smoke, outdir, lattice_rows, mega_rows,
+                   service_rows)
 
     print("# Market/fleet: jobs x policies x market-process grid "
           "(sharded batch vs per-cell loop)")

@@ -26,7 +26,12 @@ checks the two machine-independent signals instead:
   itself;
 * ``n_engine_calls`` — fused calls for the megabatch grid,
   deterministic given the grid: any *increase* means cells stopped
-  fusing (a shape-bucket or engine-view grouping regression).
+  fusing (a shape-bucket or engine-view grouping regression);
+* ``admitted`` / ``slo_met_frac`` — the service-mode stream outcomes
+  (``stepping="service"`` rows from ``benchmarks.service_bench``),
+  deterministic given seeds: admitting materially fewer tasks, or
+  meeting materially fewer SLOs, on the identical committed stream
+  means admission or replanning regressed.
 
 ``scen_per_s`` deltas are printed for information only.  Skips
 gracefully (exit 0, with a notice) when no baseline is committed yet,
@@ -103,6 +108,17 @@ def main() -> int:
                 ("n_engine_calls",
                  f"{b['n_engine_calls']} -> {f_['n_engine_calls']}",
                  f_["n_engine_calls"] > b["n_engine_calls"]))
+        if b.get("admitted") and f_.get("admitted") is not None:
+            drop = 1.0 - f_["admitted"] / b["admitted"]
+            checks.append(("admitted",
+                           f"{b['admitted']} -> {f_['admitted']}",
+                           drop > args.threshold))
+        if b.get("slo_met_frac") and f_.get("slo_met_frac") is not None:
+            drop = 1.0 - f_["slo_met_frac"] / b["slo_met_frac"]
+            checks.append(
+                ("slo_met_frac",
+                 f"{b['slo_met_frac']} -> {f_['slo_met_frac']}",
+                 drop > args.threshold))
         bad = [c for c in checks if c[2]]
         rate = ""
         if b.get("scen_per_s") and f_.get("scen_per_s"):
@@ -115,8 +131,8 @@ def main() -> int:
             failures.append((k, bad))
     if failures:
         print(f"\n# BENCH REGRESSION: {len(failures)} row(s) exceeded the "
-              f"{args.threshold:.0%} threshold on steps/vs_slot vs the "
-              f"committed baseline", file=sys.stderr)
+              f"{args.threshold:.0%} threshold vs the committed baseline",
+              file=sys.stderr)
         return 1
     print(f"# bench gate: {len(common)} re-measured row(s) within "
           f"{args.threshold:.0%} of baseline")

@@ -41,8 +41,9 @@ from typing import Any
 
 import numpy as np
 
-from repro.core.dynamic import (POLICIES, PolicyConfig, PrimaryPlan,
-                                build_primary_map, make_policy, policy)
+from repro.core.dynamic import (POLICIES, ArrivalPolicy, PolicyConfig,
+                                PrimaryPlan, build_primary_map, make_policy,
+                                policy)
 from repro.core.ils import ILSParams
 from repro.core.ils_jax import BatchedILSParams
 from repro.core.types import CloudConfig, Job
@@ -53,10 +54,12 @@ from repro.sim.mc_engine import (MCParams, MCResult, dist_stats, run_mc,
                                  run_mc_events)
 from repro.sim.simulator import SimResult, Simulator
 from repro.sim.workloads import make_job
+from repro.service import Service, ServiceResult
 
-__all__ = ["BACKENDS", "BatchedILSParams", "CloudConfig", "Experiment",
-           "ILSParams", "MCParams", "POLICIES", "Result", "make_job",
-           "make_policy", "policy", "run", "sweep"]
+__all__ = ["ArrivalPolicy", "BACKENDS", "BatchedILSParams", "CloudConfig",
+           "Experiment", "ILSParams", "MCParams", "POLICIES", "Result",
+           "Service", "ServiceResult", "make_job", "make_policy", "policy",
+           "run", "sweep"]
 
 #: execution backends: exact one-trace DES, fixed-slot MC, event-horizon
 #: MC, and the fused/sharded fleet pipeline (batched-ILS planning).

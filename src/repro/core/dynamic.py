@@ -299,6 +299,49 @@ class PrimaryPlan:
     policy: PolicyConfig
 
 
+@dataclasses.dataclass(frozen=True)
+class ArrivalPolicy:
+    """Arrival-aware knobs of the online service mode (``repro.service``,
+    DESIGN.md §2.9) — how streaming tasks are admitted and folded into
+    the incumbent plan.  Orthogonal to the ``PolicyConfig`` lattice: the
+    dynamic-phase axes keep describing what happens *after* admission.
+
+    * ``admission`` — ``"deadline"`` renders the three-verdict contract
+      (DEADLINE_MISSED / CONGESTION / SUCCESS: reject when even an empty
+      column cannot finish the task by its deadline, reject when only
+      queue backlog kills it, admit otherwise); ``"always"`` admits
+      everything (load-test mode — SLO attainment becomes the output).
+    * ``replan_every_s`` — rolling-horizon cadence: arrivals inside
+      ``(t, t + replan_every_s]`` are folded in together at the next
+      boundary (quantized to the engine's slot grid).
+    * ``queue_bound`` — CONGESTION conservativeness: a column's projected
+      drain time is scaled by this factor before the deadline check.
+    * ``warm_start`` — seed the batched-ILS refinement from the incumbent
+      plan instead of a fresh greedy solution.
+    * ``insert_candidates`` — how many columns (by projected-finish
+      pre-score) the ``insert_tasks`` kernel scores per admitted task.
+    * ``ils_every`` — run a warm-started batched-ILS refinement every
+      k-th replan boundary (0 = never: insertion-only incremental
+      planning, the cheap default).
+    """
+
+    admission: str = "deadline"
+    replan_every_s: float = 300.0
+    queue_bound: float = 1.0
+    warm_start: bool = True
+    insert_candidates: int = 8
+    ils_every: int = 0
+
+    def __post_init__(self):
+        if self.admission not in ("deadline", "always"):
+            raise ValueError(f"unknown admission mode {self.admission!r} "
+                             "(deadline/always)")
+        if self.replan_every_s <= 0:
+            raise ValueError("replan_every_s must be positive")
+        if self.insert_candidates < 1:
+            raise ValueError("insert_candidates must be >= 1")
+
+
 #: ILSParams knobs with no batched-search equivalent, checked against
 #: their defaults when the hand-off has to discard them.
 _BATCHED_DROPPED = ("max_attempt", "swap_rate", "max_failed", "relax_rate")

@@ -155,12 +155,21 @@ class BatchedILSResult:
 def run_batched_ils(tasks: Sequence[TaskSpec], pool: list[VMInstance],
                     cfg: CloudConfig, dspot: float, deadline: float,
                     params: BatchedILSParams = BatchedILSParams(),
-                    market: Market = Market.SPOT) -> BatchedILSResult:
+                    market: Market = Market.SPOT,
+                    initial: Solution | None = None) -> BatchedILSResult:
+    """Device-resident population search over P parallel ILS chains.
+
+    ``initial`` warm-starts the population from an incumbent solution
+    (the online service's rolling-horizon replans, DESIGN.md §2.9)
+    instead of the Alg. 2 greedy seed: chain 0 keeps the incumbent
+    verbatim, chains 1..P-1 diversify from it — so a replan can only
+    improve on the plan already running."""
     rng = np.random.default_rng(params.seed)
     e, rm, cores, mem, price, spot = _problem_arrays(tasks, pool, cfg)
     scale = cost_scale(tasks, cfg)
 
-    seed_sol = initial_solution(tasks, pool, cfg, dspot, market=market)
+    seed_sol = initial if initial is not None else \
+        initial_solution(tasks, pool, cfg, dspot, market=market)
     active = sorted(set(seed_sol.used_uids()) |
                     {vm.uid for vm in pool if vm.market == market})
     active_uids = jnp.asarray(active, jnp.int32)

@@ -63,6 +63,59 @@ def delta_fitness(alloc, t_idx, dest, base, e, rm, vm_cores, vm_mem,
                                     params, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def insert_tasks(alloc, dest, base, e, rm, e_new, rm_new, vm_cores, vm_mem,
+                 vm_price, vm_is_spot, *, dspot, deadline, alpha,
+                 cost_scale, boot_s, interpret: bool = True):
+    """Score single-task insertions without re-reducing untouched columns.
+
+    The service layer's admission fast path (DESIGN.md §2.9): candidate
+    (p, k) inserts ONE new task — exec-time row ``e_new`` [V], memory
+    ``rm_new`` — into incumbent ``alloc[p]`` [P, B] at column
+    ``dest[p, k]``.  Implemented as a delta *move* on an extended
+    problem: the new task starts parked on a phantom column (index V —
+    zero exec time, zero price, unit cores) and relocates to its real
+    destination, so the delta kernel re-reduces exactly {phantom, dest}
+    per candidate and the phantom empties every time (an empty column
+    contributes nothing to Eq. 8).  Because the kernel recomputes the
+    touched columns from scratch, the result equals full re-evaluation
+    of the real B+1 problem — ``ref.insert_tasks_ref`` pins the match
+    exactly (tests/test_kernels.py).  ``dest`` must index real columns
+    (< V; the phantom itself scores memory-infeasible).  ``base`` is the
+    incumbent's ``population_reduce`` 4-tuple over the *original* [P, V]
+    problem.  Returns (fitness, cost, makespan) [P, K].
+    """
+    p, b = alloc.shape
+    v = e.shape[1]
+    k = dest.shape[1]
+    e_ext = jnp.concatenate([
+        jnp.concatenate([e, jnp.zeros((b, 1), e.dtype)], axis=1),
+        jnp.concatenate([jnp.asarray(e_new, e.dtype),
+                         jnp.zeros(1, e.dtype)])[None]], axis=0)
+    rm_ext = jnp.concatenate([rm, jnp.asarray(rm_new, rm.dtype).reshape(1)])
+    alloc_ext = jnp.concatenate(
+        [alloc, jnp.full((p, 1), v, alloc.dtype)], axis=1)
+    loads, maxe, cnt, maxmem = base
+    # phantom base row: one parked task of zero work — never read (the
+    # phantom is in every candidate's touched set) but kept consistent
+    base_ext = (
+        jnp.concatenate([loads, jnp.zeros((p, 1), loads.dtype)], axis=1),
+        jnp.concatenate([maxe, jnp.zeros((p, 1), maxe.dtype)], axis=1),
+        jnp.concatenate([cnt, jnp.ones((p, 1), cnt.dtype)], axis=1),
+        jnp.concatenate([maxmem, jnp.broadcast_to(
+            jnp.asarray(rm_new, maxmem.dtype), (p, 1))], axis=1))
+    t_idx = jnp.full((p, k, 1), b, jnp.int32)
+    return delta_fitness(
+        alloc_ext, t_idx, dest, base_ext, e_ext, rm_ext,
+        jnp.concatenate([vm_cores, jnp.ones(1, vm_cores.dtype)]),
+        jnp.concatenate([vm_mem, jnp.zeros(1, vm_mem.dtype)]),
+        jnp.concatenate([vm_price, jnp.zeros(1, vm_price.dtype)]),
+        jnp.concatenate([vm_is_spot,
+                         jnp.zeros(1, jnp.asarray(vm_is_spot).dtype)]),
+        dspot=dspot, deadline=deadline, alpha=alpha, cost_scale=cost_scale,
+        boot_s=boot_s, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("v", "interpret"))
 def mc_vm_stats(assign, rem, *, v: int, interpret: bool = True):
     """Per-scenario per-VM remaining-load / unfinished-count / max-remaining,

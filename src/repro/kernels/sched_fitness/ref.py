@@ -94,6 +94,25 @@ def mc_span_advance_ref(assign: jax.Array, rem: jax.Array, drem: jax.Array,
     return rem_new, load, cnt, maxw
 
 
+def insert_tasks_ref(alloc, dest, e, rm, e_new, rm_new, vm_cores, vm_mem,
+                     vm_price, vm_is_spot, *, dspot, deadline, alpha,
+                     cost_scale, boot_s):
+    """Oracle for ``ops.insert_tasks``: append the new task to every
+    incumbent and fully re-evaluate the real B+1 problem (no phantom
+    column).  Returns (fitness, cost, makespan) [P, K]."""
+    p, b = alloc.shape
+    k = dest.shape[1]
+    e1 = jnp.concatenate([e, jnp.asarray(e_new, e.dtype)[None]], axis=0)
+    rm1 = jnp.concatenate([rm, jnp.asarray(rm_new, rm.dtype).reshape(1)])
+    cand = jnp.concatenate(
+        [jnp.broadcast_to(alloc[:, None], (p, k, b)),
+         dest[:, :, None].astype(alloc.dtype)], axis=2).reshape(p * k, b + 1)
+    fit, cost, mkp = population_fitness_ref(
+        cand, e1, rm1, vm_cores, vm_mem, vm_price, vm_is_spot, dspot=dspot,
+        deadline=deadline, alpha=alpha, cost_scale=cost_scale, boot_s=boot_s)
+    return fit.reshape(p, k), cost.reshape(p, k), mkp.reshape(p, k)
+
+
 def delta_fitness_ref(alloc, t_idx, dest, e, rm, vm_cores, vm_mem, vm_price,
                       vm_is_spot, *, dspot, deadline, alpha, cost_scale,
                       boot_s):

@@ -26,6 +26,7 @@ class EventKind(enum.Enum):
     TERMINATE = "terminate"        # spot termination — state lost (§2.8)
     AC_CHECK = "ac_check"
     DEFERRED_MIGRATION = "deferred_migration"
+    TASK_ARRIVAL = "task_arrival"  # online service mode (§2.9)
 
 
 @dataclasses.dataclass(order=True)
@@ -71,6 +72,17 @@ SC3 = Scenario("sc3", 1.0, 5.0)
 SC4 = Scenario("sc4", 5.0, 5.0)
 SC5 = Scenario("sc5", 3.0, 2.5)
 SCENARIOS = {s.name: s for s in (SC_NONE, SC1, SC2, SC3, SC4, SC5)}
+
+
+def slice_event_tensor(ev, t_s: float, dt: float):
+    """Tail of a pregenerated event tensor from absolute instant ``t_s``
+    (which must sit on the ``dt`` slot grid) — the tensor a mid-horizon
+    re-entry consumes together with ``run_mc_events(..., t0_s=t_s)``
+    (DESIGN.md §2.9).  Thin delegate over ``EventTensor.slice_slots``."""
+    start = int(round(t_s / dt))
+    if abs(start * dt - t_s) > 1e-6:
+        raise ValueError(f"t_s={t_s} must sit on the dt={dt} slot grid")
+    return ev.slice_slots(start)
 
 
 def sample_market_events(scenario: Scenario, horizon_s: float,

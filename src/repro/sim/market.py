@@ -169,6 +169,24 @@ class EventTensor:
             None if self.term_u is None else
             jnp.pad(self.term_u, pad_u, constant_values=-2.0))
 
+    def slice_slots(self, start: int) -> "EventTensor":
+        """Drop the first ``start`` slots — the tail tensor a mid-horizon
+        re-entry consumes (``run_mc_events(..., t0_s=start*dt)`` anchors
+        its slot axis back at the absolute instant, DESIGN.md §2.9).
+        ``nxt`` is dropped: its indices are tensor-relative, so the tail
+        rebuilds it with ``with_index``."""
+        if not 0 <= start < self.n_slots:
+            raise EventTensorError(
+                f"slice_slots start={start} outside [0, {self.n_slots})")
+        if start == 0:
+            return dataclasses.replace(self, nxt=None)
+        return EventTensor(
+            self.hib_k[:, start:], self.hib_u[:, start:],
+            self.res_k[:, start:], self.res_u[:, start:],
+            None,
+            None if self.term_k is None else self.term_k[:, start:],
+            None if self.term_u is None else self.term_u[:, start:])
+
     @staticmethod
     def concat(tensors: "list[EventTensor]") -> "EventTensor":
         """Stack along the scenario axis — how the fleet pipeline turns a

@@ -136,6 +136,129 @@ class MCParams:
     interpret: bool | None = None   # None: interpret only on CPU
 
 
+@dataclasses.dataclass(frozen=True)
+class EngineState:
+    """Mid-horizon engine state — the while-loop carry minus loop-local
+    bookkeeping (DESIGN.md §2.9).
+
+    Extracted by ``run_mc_events(..., stop_s=t)`` and re-injected via
+    ``state=``: per-VM lifecycle/boot/billing/credit columns, per-task
+    progress/placement/completion, event counters and each scenario's
+    slot clock.  All times are *absolute* engine seconds (slot index ×
+    dt), so a re-entered run continues the same timeline and the round
+    trip ``run(plan) == run(run(plan, stop=t).state, from=t)`` is
+    bit-exact on the slot path (tests/test_service.py pins it).  Leaves
+    may be device or numpy arrays; the class is a registered pytree so
+    ``jax.device_get`` / jit boundaries map over it.
+    """
+
+    slot: jnp.ndarray      # i32 [S] per-scenario slot clock
+    vstate: jnp.ndarray    # i32 [S, V] lifecycle code
+    boot: jnp.ndarray      # f32 [S, V] absolute boot-done instant
+    billed: jnp.ndarray    # f32 [S, V] billed seconds so far
+    credits: jnp.ndarray   # f32 [S, V] burstable credit buckets
+    rem: jnp.ndarray       # f32 [S, B] remaining work
+    assign: jnp.ndarray    # i32 [S, B] current column
+    mode: jnp.ndarray      # i32 [S, B] exec mode
+    done_at: jnp.ndarray   # f32 [S, B] completion instant (BIG if none)
+    n_hib: jnp.ndarray     # i32 [S]
+    n_res: jnp.ndarray     # i32 [S]
+    n_term: jnp.ndarray    # i32 [S]
+
+    @property
+    def n_scenarios(self) -> int:
+        return self.rem.shape[0]
+
+    @property
+    def n_vms(self) -> int:
+        return self.vstate.shape[1]
+
+    @property
+    def n_tasks(self) -> int:
+        return self.rem.shape[1]
+
+    def at_slot(self, slot: int) -> "EngineState":
+        """Clock-forward stalled scenarios to ``slot``.  A scenario whose
+        work all finished exits the loop with its clock parked early;
+        nothing can happen in the skipped span (no pending work), so
+        advancing the clock is exact — required before folding new
+        arrivals in at a later boundary."""
+        return dataclasses.replace(
+            self, slot=jnp.maximum(jnp.asarray(self.slot, jnp.int32),
+                                   jnp.int32(slot)))
+
+    def with_tasks(self, total, assign, mode) -> "EngineState":
+        """Append newly admitted tasks: full remaining work (``total``,
+        checkpoint-adjusted seconds), a destination column and exec mode
+        per task, broadcast across scenarios, completion unset."""
+        s = self.n_scenarios
+        tot = jnp.asarray(total, self.rem.dtype).reshape(1, -1)
+        t = tot.shape[1]
+        return dataclasses.replace(
+            self,
+            rem=jnp.concatenate([self.rem, jnp.tile(tot, (s, 1))], axis=1),
+            assign=jnp.concatenate(
+                [self.assign,
+                 jnp.tile(jnp.asarray(assign, jnp.int32).reshape(1, -1),
+                          (s, 1))], axis=1),
+            mode=jnp.concatenate(
+                [self.mode,
+                 jnp.tile(jnp.asarray(mode, jnp.int32).reshape(1, -1),
+                          (s, 1))], axis=1),
+            done_at=jnp.concatenate(
+                [self.done_at,
+                 jnp.full((s, t), BIG, self.done_at.dtype)], axis=1))
+
+    def set_tasks(self, idx, total, assign, mode) -> "EngineState":
+        """Write admitted tasks into existing (inert pad) task slots
+        ``idx`` — the shape-stable alternative to ``with_tasks`` used by
+        the service layer to bound engine recompiles."""
+        ix = jnp.asarray(idx, jnp.int32)
+        tot = jnp.asarray(total, self.rem.dtype)
+        return dataclasses.replace(
+            self,
+            rem=jnp.asarray(self.rem).at[:, ix].set(tot[None]),
+            assign=jnp.asarray(self.assign).at[:, ix].set(
+                jnp.asarray(assign, jnp.int32)[None]),
+            mode=jnp.asarray(self.mode).at[:, ix].set(
+                jnp.asarray(mode, jnp.int32)[None]),
+            done_at=jnp.asarray(self.done_at).at[:, ix].set(BIG))
+
+    def pad_tasks(self, b_pad: int) -> "EngineState":
+        """Grow the task axis to ``b_pad`` with inert pads (no remaining
+        work, never pending, completion unset)."""
+        extra = b_pad - self.n_tasks
+        if extra < 0:
+            raise ValueError(f"cannot shrink task axis {self.n_tasks} -> "
+                             f"{b_pad}")
+        if extra == 0:
+            return self
+        return self.with_tasks(jnp.zeros(extra), jnp.zeros(extra, jnp.int32),
+                               jnp.zeros(extra, jnp.int32))
+
+    def launch(self, cols, boot_done_s: float) -> "EngineState":
+        """Activate NOT_LAUNCHED columns ``cols`` with a boot edge at
+        ``boot_done_s`` (absolute) — the service layer's on-admit launch
+        of fresh on-demand capacity (mirrors ``_apply_launch``)."""
+        ix = jnp.asarray(cols, jnp.int32)
+        vstate = jnp.asarray(self.vstate)
+        boot = jnp.asarray(self.boot)
+        hit = vstate[:, ix] == NOT_LAUNCHED
+        return dataclasses.replace(
+            self,
+            vstate=vstate.at[:, ix].set(
+                jnp.where(hit, VM_ACTIVE, vstate[:, ix])),
+            boot=boot.at[:, ix].set(
+                jnp.where(hit, jnp.float32(boot_done_s), boot[:, ix])))
+
+
+_STATE_FIELDS = tuple(f.name for f in dataclasses.fields(EngineState))
+jax.tree_util.register_pytree_node(
+    EngineState,
+    lambda st: (tuple(getattr(st, f) for f in _STATE_FIELDS), None),
+    lambda aux, leaves: EngineState(*leaves))
+
+
 @dataclasses.dataclass
 class MCResult:
     """Per-scenario outcome arrays + distribution summaries."""
@@ -157,6 +280,7 @@ class MCResult:
     exit_slots: np.ndarray | None = None  # int [S] per-scenario exit slot
     visited: np.ndarray | None = None     # bool [S, n_slots] stepped mask
     n_terminations: np.ndarray | None = None  # int [S] spot terminations
+    state: EngineState | None = None      # mid-horizon state at stop_s
 
     @property
     def n(self) -> int:
@@ -293,6 +417,12 @@ def _scalars(job: Job, cfg: CloudConfig, params: MCParams,
         "boot_slots": jnp.int32(round(cfg.boot_overhead_s / dt)),
         "ac_slots": jnp.int32(round(cfg.allocation_cycle_s / dt)),
         "max_slots": jnp.int32(n_slots),
+        # mid-horizon entry (§2.9): first absolute slot the event tensor
+        # covers, and the absolute slot the run stops at.  Defaults — a
+        # tensor anchored at t=0 and a run to the horizon — reproduce
+        # the historical one-shot program's values exactly.
+        "slot0": jnp.int32(0),
+        "stop_slots": jnp.int32(n_slots),
     }
 
 
@@ -417,10 +547,12 @@ def _select(u, elig, k):
 # ---------------------------------------------------------------------------
 # Jitted engine
 # ---------------------------------------------------------------------------
-def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
+def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor,
+                 state: EngineState | None = None, *, s: int,
                  policy: PolicyConfig, steal_rounds: int, mig_rounds: int,
                  mem_safe: bool, use_kernel: bool, interpret: bool,
-                 stepping: str, ac_aligned: bool) -> dict:
+                 stepping: str, ac_aligned: bool,
+                 return_state: bool = False) -> dict:
     total, mem_t = arr["total"], arr["mem_t"]
     price, cores, speed = arr["price"], arr["cores"], arr["speed"]
     bfrac, memv = arr["bfrac"], arr["memv"]
@@ -449,43 +581,72 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
     init2 = (lambda x: x) if rowp else \
         (lambda x: jnp.tile(x[None], (s, 1)))
 
+    # mid-horizon entry (§2.9): the tensor's slot axis is anchored at the
+    # absolute slot ``slot0`` (0 for one-shot runs), and the run exits at
+    # ``stop`` — an early stop boundary freezes a scenario exactly like
+    # its own horizon exit would (no billing, events or progress past it)
+    # so the extracted carry re-enters bit-exactly.
+    slot0 = sc["slot0"]
+    stop = jnp.minimum(sc["max_slots"], sc["stop_slots"])
+
     launched0 = arr["launched0"]
-    carry = (
-        jnp.zeros(s, jnp.int32),                                  # slot i[S]
-        init2(jnp.where(launched0, VM_ACTIVE,
-                        NOT_LAUNCHED).astype(jnp.int32)),
-        init2(jnp.where(launched0, sc["omega"], BIG)),
-        jnp.zeros((s, v), jnp.float32),                           # billed
-        init2(jnp.where(launched0 & burst, arr["cinit"],
-                        0.0)),                                    # credits
-        init2(total),                                             # rem
-        init2(arr["assign0"]),                                    # assign
-        init2(arr["mode0"]),                                      # mode
-        jnp.full((s, b), BIG, jnp.float32),                       # done_at
-        jnp.zeros(s, jnp.int32),                                  # n_hib
-        jnp.zeros(s, jnp.int32),                                  # n_res
-        jnp.zeros(s, jnp.int32),                                  # n_term
-        jnp.int32(0),                                             # n_steps
-        jnp.zeros((s, n_slots), bool),                            # visited
-    )
+    if state is None:
+        carry = (
+            jnp.zeros(s, jnp.int32) + slot0,                      # slot i[S]
+            init2(jnp.where(launched0, VM_ACTIVE,
+                            NOT_LAUNCHED).astype(jnp.int32)),
+            init2(jnp.where(launched0, sc["omega"], BIG)),
+            jnp.zeros((s, v), jnp.float32),                       # billed
+            init2(jnp.where(launched0 & burst, arr["cinit"],
+                            0.0)),                                # credits
+            init2(total),                                         # rem
+            init2(arr["assign0"]),                                # assign
+            init2(arr["mode0"]),                                  # mode
+            jnp.full((s, b), BIG, jnp.float32),                   # done_at
+            jnp.zeros(s, jnp.int32),                              # n_hib
+            jnp.zeros(s, jnp.int32),                              # n_res
+            jnp.zeros(s, jnp.int32),                              # n_term
+            jnp.int32(0),                                         # n_steps
+            jnp.zeros((s, n_slots), bool),                        # visited
+        )
+    else:
+        # re-enter from an extracted state: scenarios that exited early
+        # (no pending work) clock-forward to slot0 — exact, nothing can
+        # happen in a span with no pending work
+        carry = (
+            jnp.maximum(state.slot.astype(jnp.int32), slot0),
+            state.vstate.astype(jnp.int32),
+            state.boot.astype(jnp.float32),
+            state.billed.astype(jnp.float32),
+            state.credits.astype(jnp.float32),
+            state.rem.astype(jnp.float32),
+            state.assign.astype(jnp.int32),
+            state.mode.astype(jnp.int32),
+            state.done_at.astype(jnp.float32),
+            state.n_hib.astype(jnp.int32),
+            state.n_res.astype(jnp.int32),
+            state.n_term.astype(jnp.int32),
+            jnp.int32(0),                                         # n_steps
+            jnp.zeros((s, n_slots), bool),                        # visited
+        )
 
     def cond(c):
-        # a scenario is live while it has pending work inside the horizon;
-        # the loop runs until every scenario has exited its own clock
-        return jnp.any((c[0] < sc["max_slots"]) &
-                       jnp.any(c[5] > 0.0, axis=1))
+        # a scenario is live while it has pending work inside the horizon
+        # (or before an early stop boundary); the loop runs until every
+        # scenario has exited its own clock
+        return jnp.any((c[0] < stop) & jnp.any(c[5] > 0.0, axis=1))
 
     def step(c):
         (i, vstate, boot, billed, credits, rem, assign, mode, done_at,
          nhib, nres, nterm, nsteps, visited) = c
 
         pending = rem > 0.0
-        # a row is live while it has pending work *inside* the horizon:
-        # under per-scenario clocks a row can sit at max_slots unfinished
-        # while others still run — it must freeze (no billing, events or
-        # progress), exactly as the lockstep slot walk's global exit
-        # would have frozen it (in_h is constant-True on the slot path)
-        in_h = i < sc["max_slots"]
+        # a row is live while it has pending work *inside* the horizon
+        # (and before any early stop boundary): under per-scenario clocks
+        # a row can sit at its exit slot unfinished while others still
+        # run — it must freeze (no billing, events or progress), exactly
+        # as the lockstep slot walk's global exit would have frozen it
+        in_h = i < stop
         gate = jnp.any(pending, axis=1) & in_h                # [S] live
 
         # ---- per-step stats: the hot [S, B] -> [S, V] reduction ---------
@@ -556,8 +717,10 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
                                 (run0 & (mode == 0)).astype(jnp.float32))
 
             # (1) next nonzero event slot, O(1) from the per-scenario
-            # tensor pointer (EventTensor.nxt, built at generation time)
-            m_ev = (ev.nxt[rows, jnp.minimum(i, n_slots - 1)] - i
+            # tensor pointer (EventTensor.nxt, built at generation time);
+            # the pointer is tensor-relative — shift by slot0
+            it = i - slot0
+            m_ev = (ev.nxt[rows, jnp.minimum(it, n_slots - 1)] - it
                     ).astype(jnp.float32)
             # (2) next AC boundary (edge e is handled by the step at e-1)
             if ac_aligned:
@@ -620,9 +783,8 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
                 m_fire = jnp.full(s, BIG, jnp.float32)
 
             # finished scenarios have no bounds left — they jump straight
-            # to the horizon and exit their clock
-            m_max = jnp.maximum(sc["max_slots"] - 1 - i, 0
-                                ).astype(jnp.float32)
+            # to their exit slot (horizon or stop boundary)
+            m_max = jnp.maximum(stop - 1 - i, 0).astype(jnp.float32)
             bounds = jnp.stack([m_ev, m_ac, m_comp, m_boot, m_cred,
                                 m_fire])                     # [6, S]
             mf = jnp.clip(jnp.where(gate, jnp.min(bounds, axis=0), BIG),
@@ -671,14 +833,15 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
         # this slot's pregenerated market events (DESIGN.md §2.4)
         if adaptive:
             # scenarios sit on different slots: per-row gather
-            ir = jnp.minimum(i, n_slots - 1)
+            # (tensor-relative index — the tensor is anchored at slot0)
+            ir = jnp.minimum(i - slot0, n_slots - 1)
             hib_k, hib_u = ev.hib_k[rows, ir], ev.hib_u[rows, ir]
             res_k, res_u = ev.res_k[rows, ir], ev.res_u[rows, ir]
             if has_term:
                 term_k, term_u = ev.term_k[rows, ir], ev.term_u[rows, ir]
         else:
             # lockstep slot walk: one dynamic slice, as before
-            i0 = i[0]
+            i0 = i[0] - slot0
             hib_k = jax.lax.dynamic_index_in_dim(ev.hib_k, i0, 1,
                                                  keepdims=False)
             hib_u = jax.lax.dynamic_index_in_dim(ev.hib_u, i0, 1,
@@ -873,25 +1036,32 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor, *, s: int,
             jnp.any(is_ac), ac_block, lambda ops: ops,
             (vstate, assign, mode))
 
-        # exited rows park at their own horizon — under the row-parametric
-        # layout that can sit strictly inside the padded slot axis, so
-        # route them to the (dropped) pad index explicitly; for the legacy
-        # layout i == max_slots == n_slots was already out of range
-        i_mark = jnp.where(i < sc["max_slots"], i, n_slots)
-        return (jnp.minimum(i1, sc["max_slots"]), vstate, boot, billed,
+        # exited rows park at their own exit slot — under the
+        # row-parametric layout that can sit strictly inside the padded
+        # slot axis, so route them to the (dropped) pad index explicitly;
+        # for the legacy layout i == max_slots == n_slots was already out
+        # of range
+        i_mark = jnp.where(i < stop, i - slot0, n_slots)
+        return (jnp.minimum(i1, stop), vstate, boot, billed,
                 credits, rem2, assign, mode, done_at, nhib, nres, nterm,
                 nsteps + 1, visited.at[rows, i_mark].set(True, mode="drop"))
 
     out = jax.lax.while_loop(cond, step, carry)
-    (i_fin, _, _, billed, _, rem, _, _, done_at, nhib, nres, nterm,
-     nsteps, visited) = out
+    (i_fin, vstate_f, boot_f, billed, credits_f, rem, assign_f, mode_f,
+     done_at, nhib, nres, nterm, nsteps, visited) = out
     makespan = jnp.max(jnp.where(done_at < BIG * 0.5, done_at, 0.0), axis=1)
-    return {"cost": jnp.sum(billed * bc(price), axis=1),
-            "makespan": makespan,
-            "unfinished": jnp.sum(rem > 0.0, axis=1),
-            "billed": billed, "n_hib": nhib, "n_res": nres,
-            "n_term": nterm, "n_steps": nsteps, "exit_slots": i_fin,
-            "visited": visited}
+    res = {"cost": jnp.sum(billed * bc(price), axis=1),
+           "makespan": makespan,
+           "unfinished": jnp.sum(rem > 0.0, axis=1),
+           "billed": billed, "n_hib": nhib, "n_res": nres,
+           "n_term": nterm, "n_steps": nsteps, "exit_slots": i_fin,
+           "visited": visited}
+    if return_state:
+        res["state"] = EngineState(
+            slot=i_fin, vstate=vstate_f, boot=boot_f, billed=billed,
+            credits=credits_f, rem=rem, assign=assign_f, mode=mode_f,
+            done_at=done_at, n_hib=nhib, n_res=nres, n_term=nterm)
+    return res
 
 
 @functools.lru_cache(maxsize=2)
@@ -904,7 +1074,8 @@ def _mc_jit(donate: bool):
     reuse pregenerated tensors (parity tests, fleet warm-up runs)."""
     return jax.jit(_mc_run_impl, static_argnames=(
         "s", "policy", "steal_rounds", "mig_rounds", "mem_safe",
-        "use_kernel", "interpret", "stepping", "ac_aligned"),
+        "use_kernel", "interpret", "stepping", "ac_aligned",
+        "return_state"),
         donate_argnums=(2,) if donate else ())
 
 
@@ -959,9 +1130,22 @@ def _plan_arrays_cached(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
     return arr, uids, mem_safe
 
 
+def _slot_of(t_s: float, dt: float, what: str) -> int:
+    k = int(round(t_s / dt))
+    if abs(k * dt - t_s) > 1e-6:
+        raise ValueError(f"{what}={t_s} must sit on the dt={dt} slot grid")
+    return k
+
+
 def run_mc_events(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
                   ev: EventTensor, params: MCParams = MCParams(),
-                  label: str = "custom", donate: bool = False) -> MCResult:
+                  label: str = "custom", donate: bool = False, *,
+                  stop_s: float | None = None,
+                  state: EngineState | None = None,
+                  t0_s: float = 0.0,
+                  return_state: bool | None = None,
+                  arrays: tuple[dict, list[int], bool] | None = None
+                  ) -> MCResult:
     """Run the dynamic phase over a pregenerated event tensor.
 
     The tensor defines the run: S scenarios (``params.n_scenarios`` is
@@ -975,12 +1159,29 @@ def run_mc_events(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
     adaptive stepping the tensor's next-event index is used (and built
     here if the tensor arrived without one).  ``donate=True`` lets XLA
     consume the tensor's buffers (don't reuse ``ev`` afterwards).
+
+    Mid-horizon entry (DESIGN.md §2.9): ``stop_s`` exits every scenario
+    at that absolute instant and (by default) returns the frozen
+    ``EngineState`` on ``MCResult.state``; ``state=`` re-enters a run
+    from an extracted state, continuing the same absolute timeline.
+    ``t0_s`` anchors the tensor's slot axis at a later absolute instant
+    (use with ``EventTensor.slice_slots`` to drop already-consumed
+    slots); both must sit on the slot grid.  The round trip is bit-exact
+    on the slot path and within the §2.5 span bound under adaptive
+    stepping.  ``arrays`` bypasses the plan-flattening cache with
+    caller-built engine arrays ``(arr, uids, mem_safe)`` — the service
+    layer owns its task axis (arrival order, inert pads) and hands it in
+    here.
     """
     _check_dt(cfg, params)
     if params.stepping not in ("adaptive", "slot"):
         raise ValueError(f"unknown stepping {params.stepping!r} "
                          "(adaptive/slot)")
-    arr, uids, mem_safe = _plan_arrays_cached(job, plan, cfg, params.ovh)
+    if arrays is not None:
+        arr, uids, mem_safe = arrays
+    else:
+        arr, uids, mem_safe = _plan_arrays_cached(job, plan, cfg,
+                                                  params.ovh)
     ev.validate()                   # diagnose malformed tensors first —
     if params.stepping == "adaptive":   # with_index would crash rawly
         ev = ev.with_index()
@@ -989,7 +1190,33 @@ def run_mc_events(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
             f"event tensor has V={ev.n_vms} columns, plan has "
             f"{len(uids)} launchable instances — regenerate the tensor "
             f"for this plan (see plan_column_uids)")
-    sc = _scalars(job, cfg, params, ev.n_slots)
+    slot0 = _slot_of(t0_s, params.dt, "t0_s")
+    n_abs = slot0 + ev.n_slots      # absolute horizon in slots
+    sc = _scalars(job, cfg, params, n_abs)
+    sc["slot0"] = jnp.int32(slot0)
+    if stop_s is not None:
+        stop_slots = _slot_of(stop_s, params.dt, "stop_s")
+        if not slot0 < stop_slots <= n_abs:
+            raise ValueError(
+                f"stop_s={stop_s} must land strictly after t0_s={t0_s} "
+                f"and inside the tensor horizon ({n_abs} slots)")
+        sc["stop_slots"] = jnp.int32(stop_slots)
+    if state is not None:
+        b = arr["total"].shape[-1]
+        if (state.n_scenarios, state.n_vms, state.n_tasks) != \
+                (ev.n_scenarios, ev.n_vms, b):
+            raise ValueError(
+                f"state shape (S={state.n_scenarios}, V={state.n_vms}, "
+                f"B={state.n_tasks}) does not match the run "
+                f"(S={ev.n_scenarios}, V={ev.n_vms}, B={b})")
+        if params.stepping == "slot":
+            slots = np.unique(np.asarray(jax.device_get(state.slot)))
+            if len(slots) > 1:
+                raise ValueError(
+                    "stepping='slot' walks all scenarios in lockstep — "
+                    f"re-entry needs a uniform slot clock, got {slots}")
+    want_state = bool(stop_s is not None) if return_state is None \
+        else return_state
     on_cpu = jax.default_backend() == "cpu"
     use_kernel = params.use_kernel if params.use_kernel is not None \
         else not on_cpu
@@ -997,12 +1224,14 @@ def run_mc_events(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
     out = _mc_jit(donate and not on_cpu)(
         # static key: the engine branches only on the dynamics axes, so
         # same-dynamics lattice policies share one compilation
-        arr, sc, ev, s=ev.n_scenarios, policy=plan.policy.engine_view(),
+        arr, sc, ev, state, s=ev.n_scenarios,
+        policy=plan.policy.engine_view(),
         steal_rounds=params.steal_rounds,
         mig_rounds=params.mig_rounds, mem_safe=mem_safe,
         use_kernel=use_kernel, interpret=interpret,
         stepping=params.stepping,
-        ac_aligned=_dt_aligned(cfg, params.dt))
+        ac_aligned=_dt_aligned(cfg, params.dt),
+        return_state=want_state)
     out = jax.device_get(out)
     unfinished = out["unfinished"].astype(int)
     makespan = out["makespan"]
@@ -1017,7 +1246,8 @@ def run_mc_events(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
         billed_s=out["billed"], vm_uids=list(uids),
         stepping=params.stepping, n_steps=int(out["n_steps"]),
         exit_slots=out["exit_slots"].astype(int), visited=out["visited"],
-        n_terminations=out["n_term"].astype(int))
+        n_terminations=out["n_term"].astype(int),
+        state=out.get("state"))
 
 
 def run_mc(job: Job, plan: PrimaryPlan, cfg: CloudConfig,

@@ -22,8 +22,9 @@ BFAST = BatchedILSParams(iterations=6, seed=3)
 MC = MCParams(n_scenarios=4, dt=30.0, seed=1)
 
 #: the pinned public surface — extending it is a conscious API decision
-API_SURFACE = ["BACKENDS", "BatchedILSParams", "CloudConfig", "Experiment",
-               "ILSParams", "MCParams", "POLICIES", "Result", "make_job",
+API_SURFACE = ["ArrivalPolicy", "BACKENDS", "BatchedILSParams",
+               "CloudConfig", "Experiment", "ILSParams", "MCParams",
+               "POLICIES", "Result", "Service", "ServiceResult", "make_job",
                "make_policy", "policy", "run", "sweep"]
 
 #: unified row schema every backend must produce

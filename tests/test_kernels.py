@@ -9,9 +9,11 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.rwkv6.ops import wkv6
 from repro.kernels.rwkv6.ref import wkv6_ref
 from repro.kernels.sched_fitness.mc_step import mc_vm_reduce
-from repro.kernels.sched_fitness.ops import (delta_fitness, mc_vm_stats,
+from repro.kernels.sched_fitness.ops import (delta_fitness, insert_tasks,
+                                             mc_vm_stats,
                                              population_fitness)
 from repro.kernels.sched_fitness.ref import (apply_moves, delta_fitness_ref,
+                                             insert_tasks_ref,
                                              mc_vm_stats_ref,
                                              population_fitness_ref)
 from repro.kernels.sched_fitness.sched_fitness import population_reduce
@@ -214,6 +216,82 @@ def test_delta_fitness_duplicate_move_tasks():
               boot_s=60.0)
     _delta_vs_oracles(alloc, t_idx, dest,
                       *_fitness_problem(rng, b, v), **kw)
+
+
+# ---------------------------------------------------- single-task insert
+def _insert_problem(rng, b, v):
+    e, rm, cores, mem, price, spot = _fitness_problem(rng, b, v)
+    e_new = jnp.asarray(rng.uniform(50, 400, v), jnp.float32)
+    rm_new = jnp.float32(rng.uniform(2, 180))
+    return e, rm, e_new, rm_new, cores, mem, price, spot
+
+
+def _insert_vs_oracle(alloc, dest, e, rm, e_new, rm_new, cores, mem,
+                      price, spot, **kw):
+    base = population_reduce(alloc, e, rm, interpret=True)
+    got = insert_tasks(alloc, dest, base, e, rm, e_new, rm_new, cores,
+                       mem, price, spot, **kw, interpret=True)
+    want = insert_tasks_ref(alloc, dest, e, rm, e_new, rm_new, cores,
+                            mem, price, spot, **kw)
+    _assert_delta_matches(got, want)
+    return got
+
+
+@pytest.mark.parametrize("p,b,v,k", [
+    (1, 1, 1, 1),
+    (3, 37, 11, 9),          # the service layer's shape class
+    (5, 33, 7, 3),
+    (2, 64, 128, 8),         # V exactly the lane width (pad-column case)
+])
+def test_insert_tasks_matches_ref_oracle(p, b, v, k):
+    """The admission fast path (phantom-column delta move) must equal a
+    full re-evaluation of the real B+1 problem — exact inf masks, finite
+    entries to the kernel suite's 1e-5 tolerance."""
+    rng = np.random.default_rng(p * 1000 + b)
+    alloc = jnp.asarray(rng.integers(0, v, (p, b)), jnp.int32)
+    dest = jnp.asarray(rng.integers(0, v, (p, k)), jnp.int32)
+    kw = dict(dspot=2240.0, deadline=2700.0, alpha=0.5, cost_scale=0.2,
+              boot_s=60.0)
+    _insert_vs_oracle(alloc, dest, *_insert_problem(rng, b, v), **kw)
+
+
+def test_insert_tasks_infeasibility_masks_agree():
+    """Tight deadline + oversized memory rows: both paths must agree
+    exactly on which insertions are infeasible."""
+    p, b, v, k = 4, 30, 9, 6
+    rng = np.random.default_rng(17)
+    alloc = jnp.asarray(rng.integers(0, v, (p, b)), jnp.int32)
+    dest = jnp.asarray(rng.integers(0, v, (p, k)), jnp.int32)
+    e, rm, e_new, _, cores, mem, price, spot = _insert_problem(rng, b, v)
+    # the feasibility check is per-column count x max-task-memory: 900
+    # trips it on the small-memory columns only (a genuine mixed mask)
+    rm_new = jnp.float32(900.0)
+    kw = dict(dspot=2240.0, deadline=2700.0, alpha=0.5, cost_scale=0.2,
+              boot_s=60.0)
+    fit, _, _ = _insert_vs_oracle(alloc, dest, e, rm, e_new, rm_new,
+                                  cores, mem, price, spot, **kw)
+    infs = np.isinf(np.asarray(fit))
+    assert infs.any() and not infs.all()
+
+
+def test_insert_tasks_with_parked_incumbents():
+    """The service's ledger style: completed / not-yet-folded tasks sit
+    on the phantom column (index V) with zero work and zero memory —
+    they must not contribute to any insertion's score."""
+    p, b, v, k = 2, 24, 8, 4
+    rng = np.random.default_rng(23)
+    alloc = np.asarray(rng.integers(0, v, (p, b)), np.int32)
+    parked = rng.random(b) < 0.4                  # shared [B] ledger mask
+    alloc = jnp.asarray(np.where(parked[None], v, alloc))
+    e, rm, e_new, rm_new, cores, mem, price, spot = \
+        _insert_problem(rng, b, v)
+    e = jnp.where(jnp.asarray(parked)[:, None], 0.0, e)
+    rm = jnp.where(jnp.asarray(parked), 0.0, rm)
+    dest = jnp.asarray(rng.integers(0, v, (p, k)), jnp.int32)
+    kw = dict(dspot=2240.0, deadline=2700.0, alpha=0.5, cost_scale=0.2,
+              boot_s=60.0)
+    _insert_vs_oracle(alloc, dest, e, rm, e_new, rm_new, cores, mem,
+                      price, spot, **kw)
 
 
 # ---------------------------------------------------------------- flash

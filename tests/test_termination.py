@@ -44,6 +44,7 @@ except ImportError:                                   # pragma: no cover
 
 from repro import api
 from repro.core.ils import ILSParams
+from repro.core.ils_jax import BatchedILSParams
 from repro.core.runtime import (CHECKPOINT_WRITE_S, TaskRun, TaskState,
                                 VMState)
 from repro.core.types import CloudConfig, TaskSpec
@@ -53,6 +54,7 @@ from repro.sim.market import (EventTensor, EventTensorError, PoissonProcess,
                               TraceReplayProcess)
 from repro.sim.mc_engine import (MCParams, _select, n_slots_for,
                                  plan_column_uids, run_mc, run_mc_events)
+from repro.sim.megabatch import evaluate_grid
 from repro.sim.simulator import Simulator
 from repro.sim.workloads import make_job
 
@@ -160,6 +162,44 @@ def test_deferred_family_keeps_exact_count_parity(pol):
     assert int(mc.n_terminations[0]) == des.n_terminations >= 1
     assert int(mc.n_hibernations[0]) == des.n_hibernations
     assert des.unfinished == 0 and int(mc.unfinished[0]) == 0
+
+
+#: ROADMAP 4(a) measured-bound pin.  The vectorized Alg. 4 migrates a
+#: failed VM's bag in one feasibility-gated shot and drops an infeasible
+#: group for good, while the DES re-queues orphans and retries at the
+#: next event — so the deferred (hads) family's eventful cost parity is
+#: count-only.  Measured worst case across the 2 policies x 3 traces
+#: below: cost rel 2.29 (hads / term-one), makespan rel 0.76
+#: (hads / term-storm), and on the mixed trace the MC drops exactly one
+#: 20-task orphan group for good while the DES retries and drains the
+#: bag.  The rel pins keep the §2.3 ~2x-headroom idiom; the dropped
+#: bound is exact: an MC orphan-retry pass *shrinking* any of these is
+#: progress, drifting past a pin is a regression.
+HADS_GAP_COST_REL, HADS_GAP_MKP_REL = 4.0, 1.2
+HADS_GAP_MAX_DROPPED = 20
+
+
+@pytest.mark.parametrize("pol", ("hads", "hads+burst"))
+@pytest.mark.parametrize("i_trace", range(3))
+def test_hads_family_gap_stays_within_measured_bound(pol, i_trace):
+    """The one-shot-migration vs orphan-retry gap of ROADMAP 4(a),
+    pinned: event counts stay *exact* on every trace, the DES always
+    drains the bag, the MC never strands more than the measured orphan
+    group, and the cost/makespan drift stays under the measured bounds
+    (see HADS_GAP_* above)."""
+    job, plan = _j60(), _cached_plan(pol)
+    proc = _term_traces(plan)[i_trace]
+    des = Simulator(job, plan, CFG, scenario=proc, seed=0).run()
+    mc = run_mc(job, plan, CFG, scenario=proc, params=PARITY_MC)
+    assert int(mc.n_terminations[0]) == des.n_terminations >= 1
+    assert int(mc.n_hibernations[0]) == des.n_hibernations
+    assert int(mc.n_resumes[0]) == des.n_resumes
+    assert des.unfinished == 0
+    assert int(mc.unfinished[0]) <= HADS_GAP_MAX_DROPPED
+    cost_rel = abs(float(mc.cost[0]) - des.cost) / des.cost
+    mkp_rel = abs(float(mc.makespan[0]) - des.makespan) / des.makespan
+    assert cost_rel <= HADS_GAP_COST_REL, cost_rel
+    assert mkp_rel <= HADS_GAP_MKP_REL, mkp_rel
 
 
 # ---------------------------------------------------------------------------
@@ -452,3 +492,57 @@ def test_terminate_equals_hibernate_forever_under_migration(times, m):
     assert rt.n_hibernations == rh.n_terminations == 0
     assert math.isclose(rt.cost, rh.cost, rel_tol=1e-9)
     assert math.isclose(rt.makespan, rh.makespan, rel_tol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Table VI-style trend artifact (ROADMAP 4(c)): termination_frac sweep
+# ---------------------------------------------------------------------------
+#: the three paper aliases swept below (Table V/VI column set)
+PAPER_ALIASES = ("burst-hads", "hads", "ils-ondemand")
+
+
+def test_termination_frac_trend_across_paper_aliases():
+    """Teylo-style (arxiv 1810.10279) deadline-met vs termination-rate
+    trend on one fused megabatch grid: 3 paper aliases x sc5 with
+    ``termination_frac`` in (~0, 0.5, 1.0).  Positive fracs share the
+    hibernation schedule (the frac only thresholds the conversion
+    draws), so along the axis terminations can only be *added*.
+
+    The trend is asserted where the engine structurally guarantees it:
+
+      * burst-hads (the paper's full framework — immediate Alg. 4
+        migration + stealing) stays monotone non-increasing in the
+        frac and *dominates* hads at every point — Table VI's
+        substantive claim;
+      * ``mean_terminations`` is monotone non-decreasing in the frac
+        for every alias, and actually fires for the event-exposed ones;
+      * ils-ondemand holds no spot VMs, so its whole row is invariant
+        in the frac with zero terminations.
+
+    hads itself is deliberately NOT pinned monotone: converting a
+    hibernation into a termination *bypasses* its deferred-migration
+    wait (terminations always migrate immediately), so its deadline-met
+    fraction can recover at high fracs (measured 0.875 -> 0.875 -> 1.0
+    on this grid) — the ROADMAP 4(a) family effect, not a bug."""
+    fracs = (1e-9, 0.5, 1.0)
+    procs = [dataclasses.replace(
+        PoissonProcess.from_scenario(SCENARIOS["sc5"]),
+        termination_frac=f, name=f"sc5-t{i}") for i, f in enumerate(fracs)]
+    grid = evaluate_grid(["J30"], list(PAPER_ALIASES), procs, cfg=CFG,
+                         params=MCParams(n_scenarios=16, dt=30.0, seed=5),
+                         ils_params=FAST,
+                         batched_ils=BatchedILSParams(iterations=8, seed=3))
+    rows = {(r["policy"], r["process"]): r for r in grid.rows}
+    assert len(rows) == len(PAPER_ALIASES) * len(fracs)
+    met = {p: [rows[p, f"sc5-t{i}"]["deadline_met_frac"]
+               for i in range(len(fracs))] for p in PAPER_ALIASES}
+    terms = {p: [rows[p, f"sc5-t{i}"]["mean_terminations"]
+                 for i in range(len(fracs))] for p in PAPER_ALIASES}
+    bh = met["burst-hads"]
+    assert all(a >= b for a, b in zip(bh, bh[1:])), bh
+    assert all(b >= h for b, h in zip(bh, met["hads"])), (bh, met["hads"])
+    assert len(set(met["ils-ondemand"])) == 1, met["ils-ondemand"]
+    assert terms["ils-ondemand"] == [0.0, 0.0, 0.0]
+    for p in PAPER_ALIASES:
+        assert terms[p] == sorted(terms[p]), (p, terms[p])
+    assert terms["burst-hads"][-1] > 0 and terms["hads"][-1] > 0
