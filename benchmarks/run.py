@@ -64,7 +64,8 @@ DYNAMIC_ROLLUP = os.path.join(os.path.dirname(__file__), "..",
 def dynamic_rollup(sim_rows: list[dict], smoke: bool,
                    outdir: str, lattice_rows: list[dict] = (),
                    mega_rows: list[dict] = (),
-                   service_rows: list[dict] = ()) -> list[dict]:
+                   service_rows: list[dict] = (),
+                   recovery_rows: list[dict] = ()) -> list[dict]:
     """Headline dynamic-engine throughput per (job, policy, process, S,
     dt, stepping) + slots-skipped fraction, written to the root-level
     ``BENCH_dynamic.json`` and appended to ``results/trajectory.jsonl``
@@ -138,6 +139,23 @@ def dynamic_rollup(sim_rows: list[dict], smoke: bool,
                      "slo_met_frac": r["slo_met_frac"],
                      "replan_p95_ms": r["replan_p95_ms"]})
 
+    # fault-recovery rows (sim_bench.recovery, DESIGN.md §2.10): the
+    # chaos grid's deterministic recovery signals — the gate hard-fails
+    # any fresh stranded_tasks > 0 and watches the retry effort
+    for r in recovery_rows:
+        if r.get("table") != "recovery":
+            continue
+        rows.append({"table": "recovery",
+                     **{k: r[k] for k in ("job", "policy", "process",
+                                          "s", "dt")},
+                     "stepping": "recovery",
+                     "stranded_tasks": r["stranded_tasks"],
+                     "orphan_retry_rounds_mean":
+                         r["orphan_retry_rounds_mean"],
+                     "work_conserved": r["work_conserved"],
+                     "mean_terminations": r["mean_terminations"],
+                     "deadline_met_frac": r["deadline_met_frac"]})
+
     def key_of(row):
         return tuple(row.get(k) for k in ("job", "policy", "process",
                                           "s", "dt", "stepping"))
@@ -206,8 +224,13 @@ def main() -> None:
     service_rows = emit("service",
                         service_bench.smoke() if args.smoke
                         else service_bench.run(), fh)
+
+    print("# Fault recovery: chaos grid, orphan-retry + stranded signals")
+    recovery_rows = emit("recovery",
+                         sim_bench.recovery_smoke() if args.smoke
+                         else sim_bench.recovery(), fh)
     dynamic_rollup(sim_rows, args.smoke, outdir, lattice_rows, mega_rows,
-                   service_rows)
+                   service_rows, recovery_rows)
 
     print("# Market/fleet: jobs x policies x market-process grid "
           "(sharded batch vs per-cell loop)")

@@ -144,3 +144,44 @@ def smoke() -> list[dict]:
     """CI-sized variant: one policy per regime, tiny S, one dt."""
     return run(policies=("burst-hads", "hads"), sizes=(1, 16),
                dts=(30.0,), des_cap=16)
+
+
+def recovery(jobs: tuple[str, ...] = ("J30",),
+             intensities: tuple[float, ...] = (0.0, 0.4, 0.8),
+             n_scenarios: int = 16) -> list[dict]:
+    """Fault-recovery section (DESIGN.md §2.10): drive the chaos suite's
+    adversarial fault grid through the megabatch engine and surface the
+    *deterministic* recovery signals per cell — ``stranded_tasks`` (the
+    orphan-retry ledger must recover every failed migration: the CI gate
+    hard-fails on any nonzero value), ``orphan_retry_rounds_mean`` (how
+    hard the ledger worked) and the conservation/degradation context.
+    ``suite_ok`` folds in the suite's own invariant verdict (monotone
+    degradation included), so a green bench row set implies a green
+    ``python -m repro.chaos`` run on the same grid."""
+    from repro.chaos import run_chaos_suite
+
+    t0 = time.perf_counter()
+    rep = run_chaos_suite(
+        jobs=jobs, intensities=intensities,
+        params=MCParams(n_scenarios=n_scenarios, dt=30.0, seed=0))
+    wall = max(time.perf_counter() - t0, 1e-9)
+    rows = []
+    for r in rep.rows:
+        rows.append({
+            "table": "recovery", "job": r["job"], "policy": r["policy"],
+            "process": r["process"], "s": r["s"], "dt": r["dt"],
+            "stranded_tasks": int(r["stranded_tasks"]),
+            "orphan_retry_rounds_mean":
+                round(float(r["orphan_retry_rounds_mean"]), 3),
+            "work_conserved": bool(r["work_conserved"]),
+            "mean_terminations": round(float(r["mean_terminations"]), 2),
+            "deadline_met_frac": round(float(r["deadline_met_frac"]), 3),
+            "suite_ok": bool(rep.ok),
+            "cells_per_s": round(len(rep.rows) / wall, 2),
+        })
+    return rows
+
+
+def recovery_smoke() -> list[dict]:
+    """CI-sized chaos-recovery bench: the suite's own smoke grid."""
+    return recovery(jobs=("J12",), intensities=(0.0, 0.8), n_scenarios=4)

@@ -31,12 +31,22 @@ checks the two machine-independent signals instead:
   (``stepping="service"`` rows from ``benchmarks.service_bench``),
   deterministic given seeds: admitting materially fewer tasks, or
   meeting materially fewer SLOs, on the identical committed stream
-  means admission or replanning regressed.
+  means admission or replanning regressed;
+* ``stranded_tasks`` / ``work_conserved`` — the fault-recovery
+  invariants (``stepping="recovery"`` rows from
+  ``benchmarks.sim_bench.recovery``, DESIGN.md §2.10): any freshly
+  measured stranded task or conservation break fails **regardless of
+  the baseline** — recovery is an invariant, not a trend;
+* ``orphan_retry_rounds_mean`` — how hard the retry ledger worked on
+  the identical chaos grid: material growth means recovery got slower.
 
 ``scen_per_s`` deltas are printed for information only.  Skips
 gracefully (exit 0, with a notice) when no baseline is committed yet,
 the fresh artifact is missing, or no keys overlap — a new bench grid
-shouldn't brick CI.
+shouldn't brick CI.  A gated *section* (a ``stepping`` value) present
+in the committed baseline but absent from the fresh artifact is NOT a
+graceful skip: the gate fails loudly and lists the absent keys, so a
+rollup wiring regression can't silently retire a signal.
 """
 from __future__ import annotations
 
@@ -71,6 +81,29 @@ def main() -> int:
     with open(fresh_path) as f:
         fresh = _rows_by_key(json.load(f))
 
+    # fault-recovery invariants hold unconditionally on freshly measured
+    # rows — no committed baseline is needed to know stranded work or a
+    # vanished task is wrong (DESIGN.md §2.10)
+    measured = {k: r for k, r in fresh.items() if not r.get("carried")}
+    stranded = [(k, r["stranded_tasks"]) for k, r in sorted(
+        measured.items(), key=lambda kv: str(kv[0]))
+        if r.get("stranded_tasks")]
+    vanished = [k for k, r in sorted(measured.items(),
+                                     key=lambda kv: str(kv[0]))
+                if r.get("work_conserved") is False]
+    if stranded or vanished:
+        print("\n# BENCH INVARIANT FAILURE (fault recovery, baseline-"
+              "independent):", file=sys.stderr)
+        for k, n in stranded:
+            print(f"- {dict(zip(KEY, k))}: stranded_tasks={n} — the "
+                  f"orphan-retry ledger left work unrecovered",
+                  file=sys.stderr)
+        for k in vanished:
+            print(f"- {dict(zip(KEY, k))}: work_conserved=false — a "
+                  f"task vanished from the completion census",
+                  file=sys.stderr)
+        return 1
+
     try:
         blob = subprocess.run(
             ["git", "show", f"HEAD:{ARTIFACT}"], cwd=REPO, check=True,
@@ -79,6 +112,20 @@ def main() -> int:
     except (subprocess.CalledProcessError, FileNotFoundError, ValueError):
         print(f"# bench gate: no committed {ARTIFACT} baseline — skipping")
         return 0
+
+    # a gated section (a `stepping` value) committed in the baseline but
+    # absent from the fresh artifact means the rollup stopped emitting
+    # it — fail loudly with the absent keys instead of skipping, else a
+    # wiring regression silently retires the whole signal
+    gone = {k[-1] for k in base} - {k[-1] for k in fresh}
+    if gone:
+        print(f"\n# BENCH GATE FAILURE: baseline section(s) "
+              f"{sorted(gone)} missing from fresh {ARTIFACT} — the "
+              f"rollup no longer emits them; absent keys:",
+              file=sys.stderr)
+        for k in sorted((k for k in base if k[-1] in gone), key=str):
+            print(f"- {dict(zip(KEY, k))}", file=sys.stderr)
+        return 1
 
     common = sorted((k for k in set(fresh) & set(base)
                      if not fresh[k].get("carried")), key=str)
@@ -119,6 +166,14 @@ def main() -> int:
                 ("slo_met_frac",
                  f"{b['slo_met_frac']} -> {f_['slo_met_frac']}",
                  drop > args.threshold))
+        if b.get("orphan_retry_rounds_mean") is not None and \
+                f_.get("orphan_retry_rounds_mean") is not None:
+            br = b["orphan_retry_rounds_mean"]
+            fr = f_["orphan_retry_rounds_mean"]
+            # small absolute slack: a 0 -> 0.2 move on a quiet cell is
+            # noise-free determinism churn, not a recovery slowdown
+            checks.append(("orphan_retry_rounds_mean", f"{br} -> {fr}",
+                           fr > br * (1.0 + args.threshold) + 0.25))
         bad = [c for c in checks if c[2]]
         rate = ""
         if b.get("scen_per_s") and f_.get("scen_per_s"):

@@ -54,12 +54,13 @@ from repro.sim.mc_engine import (MCParams, MCResult, dist_stats, run_mc,
                                  run_mc_events)
 from repro.sim.simulator import SimResult, Simulator
 from repro.sim.workloads import make_job
+from repro.chaos import ChaosReport, run_chaos_suite
 from repro.service import Service, ServiceResult
 
-__all__ = ["ArrivalPolicy", "BACKENDS", "BatchedILSParams", "CloudConfig",
-           "Experiment", "ILSParams", "MCParams", "POLICIES", "Result",
-           "Service", "ServiceResult", "make_job", "make_policy", "policy",
-           "run", "sweep"]
+__all__ = ["ArrivalPolicy", "BACKENDS", "BatchedILSParams", "ChaosReport",
+           "CloudConfig", "Experiment", "ILSParams", "MCParams", "POLICIES",
+           "Result", "Service", "ServiceResult", "make_job", "make_policy",
+           "policy", "run", "sweep", "run_chaos_suite"]
 
 #: execution backends: exact one-trace DES, fixed-slot MC, event-horizon
 #: MC, and the fused/sharded fleet pipeline (batched-ILS planning).

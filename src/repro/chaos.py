@@ -1,0 +1,202 @@
+"""Chaos suite — sweep policies × fault plans and assert the
+fault-recovery invariants (DESIGN.md §2.10).
+
+``run_chaos_suite`` drives the adversarial :class:`sim.chaos.FaultPlan`
+grid through the megabatch engine (one fused call per shape bucket —
+a chaos sweep is just another process grid) and checks what graceful
+degradation *means* here, at every fault intensity:
+
+* **work conservation** — in every scenario of every cell, each task
+  either completed (``n_done``) or is accounted as unfinished; nothing
+  vanishes (``work_conserved`` from the engine's completion census).
+* **no stranded work** — the orphan-retry ledger (§2.10) must recover
+  every infeasibility-deferred migration group by the horizon:
+  ``stranded_tasks == 0``.  On-demand fallback capacity makes this
+  achievable even when a storm kills every spot column.
+* **monotone degradation** — a ``FaultPlan``'s event set grows with
+  ``intensity`` by construction (superset instants and victims), so per
+  (job, policy, kind): realized terminations must be non-decreasing and
+  the deadline-met fraction non-increasing as intensity rises.
+
+Violations are collected, never raised mid-sweep; the CLI exits nonzero
+when any survive — the CI chaos smoke step
+(``python -m repro.chaos --smoke``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import numpy as np
+
+from repro.core.dynamic import policy as resolve_policy
+from repro.core.ils import ILSParams
+from repro.core.ils_jax import BatchedILSParams
+from repro.sim.chaos import FAULT_KINDS, fault_grid
+from repro.sim.mc_engine import MCParams
+from repro.sim.megabatch import evaluate_grid
+
+#: the CI smoke grid — small, deterministic, fused into few engine calls
+SMOKE_JOBS = ("J12",)
+SMOKE_POLICIES = ("burst-hads", "hads+burst")
+SMOKE_INTENSITIES = (0.0, 0.4, 0.8)
+
+#: plan timing for the suite grids.  Waves must land inside the *busy
+#: era* of the jobs, not just the deadline window: the paper's deadlines
+#: carry large slack (J12 drains in ~340 s of its 2700 s deadline), so
+#: FaultPlan's defaults (period 600 s, mass kill at 0.75·deadline) would
+#: all fire after the bag drains and the grid would assert nothing.
+#: Early, tight cadences make the adversary actually adversarial.
+SUITE_PLAN_KW = {"period_s": 120.0, "at_frac": 0.1, "flap_gap_s": 60.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosViolation:
+    """One failed invariant: which check, on which cell(s), and why."""
+
+    check: str      # work_conserved | stranded | terminations | slo
+    cell: str       # "job/policy/process" (or ".../kind" for trends)
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[{self.check}] {self.cell}: {self.detail}"
+
+
+@dataclasses.dataclass
+class ChaosReport:
+    """Suite outcome: the megabatch rows plus surviving violations."""
+
+    rows: list
+    violations: list
+    n_engine_calls: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def summary(self) -> dict:
+        worst = [r for r in self.rows
+                 if r["stranded_tasks"] or not r["work_conserved"]]
+        return {"ok": self.ok,
+                "n_cells": len(self.rows),
+                "n_engine_calls": self.n_engine_calls,
+                "n_violations": len(self.violations),
+                "violations": [str(v) for v in self.violations],
+                "stranded_total": sum(r["stranded_tasks"]
+                                      for r in self.rows),
+                "retry_rounds_max": max(
+                    (r["orphan_retry_rounds_mean"] for r in self.rows),
+                    default=0.0),
+                "cells_failing_conservation": [
+                    f'{r["job"]}/{r["policy"]}/{r["process"]}'
+                    for r in worst]}
+
+
+def _trend_checks(rows_by_plan: dict, plans, jobs, policies,
+                  slo_tol: float) -> list:
+    """Monotone-degradation checks per (job, policy, kind) across the
+    ascending intensity ladder."""
+    out = []
+    kinds = {}
+    for p in plans:
+        kinds.setdefault(p.kind, []).append(p)
+    for ps in kinds.values():
+        ps.sort(key=lambda p: p.intensity)
+    for job in jobs:
+        for pol in policies:
+            for kind, ps in kinds.items():
+                seq = [rows_by_plan[(job, pol, p.name)] for p in ps]
+                cell = f"{job}/{pol}/{kind}"
+                term = [r["mean_terminations"] for r in seq]
+                if any(b < a - 1e-9 for a, b in zip(term, term[1:])):
+                    out.append(ChaosViolation(
+                        "terminations", cell,
+                        f"realized terminations not non-decreasing in "
+                        f"intensity: {term}"))
+                slo = [r["deadline_met_frac"] for r in seq]
+                if any(b > a + slo_tol for a, b in zip(slo, slo[1:])):
+                    out.append(ChaosViolation(
+                        "slo", cell,
+                        f"deadline-met fraction rises with intensity: "
+                        f"{slo} (tol {slo_tol})"))
+    return out
+
+
+def run_chaos_suite(jobs=SMOKE_JOBS, policies=SMOKE_POLICIES,
+                    kinds=FAULT_KINDS, intensities=SMOKE_INTENSITIES, *,
+                    cfg=None, params: MCParams | None = None,
+                    ils_params: ILSParams | None = None,
+                    batched_ils: BatchedILSParams | None = None,
+                    slo_tol: float = 0.0,
+                    plan_kw: dict | None = None) -> ChaosReport:
+    """Sweep the policy × fault-plan grid and collect invariant
+    violations (module docstring).  Deterministic per argument set: the
+    plans are deterministic adversaries and the engine seeds are fixed,
+    so a passing grid is a pin, not a sample.  ``slo_tol`` loosens the
+    monotone-SLO check for grids where a kill frees a *slow* column
+    (deferred-family recovery, ROADMAP 4); the smoke grid needs none.
+    ``plan_kw`` overrides the busy-era plan timing (``SUITE_PLAN_KW``)."""
+    plans = fault_grid(kinds, intensities,
+                       **(SUITE_PLAN_KW if plan_kw is None else plan_kw))
+    grid = evaluate_grid(
+        list(jobs), list(policies), plans, cfg=cfg,
+        params=params or MCParams(n_scenarios=4, dt=30.0, seed=0),
+        ils_params=ils_params or ILSParams(max_iteration=8, max_attempt=8,
+                                           seed=3),
+        plan_engine="batched",
+        batched_ils=batched_ils or BatchedILSParams(iterations=8, seed=3))
+    violations = []
+    by_plan = {}
+    for r in grid.rows:
+        by_plan[(r["job"], r["policy"], r["process"])] = r
+        cell = f'{r["job"]}/{r["policy"]}/{r["process"]}'
+        if not r["work_conserved"]:
+            violations.append(ChaosViolation(
+                "work_conserved", cell,
+                f'n_done + unfinished != n_tasks={r["n_tasks"]} in some '
+                f'scenario — a task vanished'))
+        if r["stranded_tasks"] != 0:
+            violations.append(ChaosViolation(
+                "stranded", cell,
+                f'{r["stranded_tasks"]} orphaned tasks never recovered '
+                f'by the retry ledger'))
+    # rows carry the *resolved* lattice point's name, not the spec string
+    pol_names = [resolve_policy(p).name for p in policies]
+    violations += _trend_checks(by_plan, plans, jobs, pol_names, slo_tol)
+    return ChaosReport(rows=grid.rows, violations=violations,
+                       n_engine_calls=grid.n_engine_calls)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Chaos fault-injection suite (DESIGN.md §2.10): "
+                    "sweep adversarial fault plans, assert recovery "
+                    "invariants, exit nonzero on any violation.")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the small deterministic CI grid")
+    ap.add_argument("--scenarios", type=int, default=None,
+                    help="override MC scenario count")
+    ap.add_argument("--json", default=None,
+                    help="write the full row set to this path")
+    args = ap.parse_args(argv)
+    params = None
+    if args.scenarios:
+        params = MCParams(n_scenarios=args.scenarios, dt=30.0, seed=0)
+    rep = run_chaos_suite(params=params)
+    print(json.dumps(rep.summary(), indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rep.rows, f, indent=2, default=float)
+    if not rep.ok:
+        print(f"chaos suite FAILED: {len(rep.violations)} invariant "
+              f"violation(s)", file=sys.stderr)
+        for v in rep.violations:
+            print(f"  {v}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":                            # pragma: no cover
+    sys.exit(main())

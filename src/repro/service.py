@@ -45,6 +45,18 @@ Semantics pinned by tests/test_service.py:
   reference timeline); the remaining scenarios measure SLO attainment
   under market-event uncertainty.
 
+Fault recovery (DESIGN.md §2.10): under terminating market processes a
+task can be stranded when its column is killed and the engine's Alg. 4
+migration finds no feasible destination.  At every rolling boundary the
+service reads the engine's exported orphan ledger (``EngineState.orph``)
+plus the scenario-0 terminated-column view and routes each stranded
+task back through the same three-verdict pipeline as a fresh arrival —
+recorded with ``REQUEUED`` provenance, re-admitting only the remaining
+checkpoint-floored work, relocating in place (per-scenario progress is
+preserved) and still bound by the no-eviction guard.  Rejects mutate
+nothing: ``DEADLINE_MISSED`` retires the task, ``CONGESTION`` retries
+at the next boundary.
+
 First-class service metrics (``ServiceResult.summary``): sustained
 tasks/s admitted, SLO-met fraction and replan-latency p95 — fed into
 BENCH_dynamic.json via ``benchmarks/service_bench.py``.
@@ -71,13 +83,19 @@ from repro.kernels.sched_fitness.ops import insert_tasks
 from repro.kernels.sched_fitness.sched_fitness import population_reduce
 from repro.sim.market import EventTensor, MarketProcess, as_process
 from repro.sim.mc_engine import (BIG, EngineState, MCParams, MCResult,
-                                 NOT_LAUNCHED, VM_ACTIVE, run_mc_events)
+                                 NOT_LAUNCHED, VM_ACTIVE, VM_TERMINATED,
+                                 run_mc_events)
 
 #: admission verdict vocabulary (one per arrival, deterministic)
 VERDICT_SUCCESS = "SUCCESS"
 VERDICT_CONGESTION = "CONGESTION"
 VERDICT_DEADLINE_MISSED = "DEADLINE_MISSED"
 VERDICTS = (VERDICT_DEADLINE_MISSED, VERDICT_CONGESTION, VERDICT_SUCCESS)
+
+#: verdict-record provenance — a fresh arrival vs. a task stranded on a
+#: terminated column routed back through admission (DESIGN.md §2.10)
+PROVENANCE_ARRIVAL = "ARRIVAL"
+PROVENANCE_REQUEUED = "REQUEUED"
 
 #: engine task-axis capacity granule — admitted tasks land in inert pad
 #: slots, so the jitted engine sees a new shape only every GRANULE tasks
@@ -204,6 +222,7 @@ class AdmissionRecord:
     deadline_s: float
     eta_s: float        # best projected completion bound at admission
     column: int         # destination column (-1 on reject)
+    provenance: str = PROVENANCE_ARRIVAL   # ARRIVAL | REQUEUED
 
 
 @dataclasses.dataclass
@@ -224,6 +243,7 @@ class ServiceResult:
     makespan_s: np.ndarray      # f32 [S]
     unfinished: np.ndarray      # int [S]
     mc: MCResult | None = None  # final engine segment (counts, billing)
+    n_requeued: int = 0         # stranded tasks re-admitted (§2.10)
 
     @property
     def replan_p95_ms(self) -> float:
@@ -238,9 +258,12 @@ class ServiceResult:
         return out
 
     def summary(self) -> dict:
-        return {"n_arrivals": len(self.records),
+        n_arr = sum(1 for r in self.records
+                    if r.provenance == PROVENANCE_ARRIVAL)
+        return {"n_arrivals": n_arr,
                 "n_admitted": self.n_admitted,
                 "n_rejected": self.n_rejected,
+                "n_requeued": self.n_requeued,
                 "verdicts": self.verdict_counts,
                 "admitted_per_s": self.admitted_per_s,
                 "slo_met_frac": self.slo_met_frac,
@@ -311,6 +334,7 @@ class Service:
         self._deadline: list[float] = [] # absolute deadline per task
         self._assign: list[int] = []     # planned column per task
         self._records: list[AdmissionRecord] = []
+        self._requeue_dead: set[int] = set()   # terminal requeue rejects
         self._replan_ms: list[float] = []
         self._state: EngineState | None = None
         self._cap = 0                    # padded engine task capacity
@@ -550,6 +574,90 @@ class Service:
         return AdmissionRecord(a.task.tid, a.time_s, VERDICT_SUCCESS,
                                a.deadline_s, eta, int(c))
 
+    # -- fault recovery: re-admission of stranded work (§2.10) -------------
+    def _requeue_stranded(self, t_b: float) -> None:
+        """Route tasks stranded on terminated columns back through the
+        three-verdict admission pipeline at a rolling boundary.  Scenario
+        0 is the reference timeline: a task pending there whose column is
+        ``VM_TERMINATED`` (or flagged in the engine's exported orphan
+        ledger) gets a fresh verdict against the boundary state.  Rejects
+        mutate nothing; ``DEADLINE_MISSED`` is terminal (a passed
+        deadline cannot un-pass), ``CONGESTION`` re-enters at the next
+        boundary once capacity frees up."""
+        st = self._state
+        b = len(self._tasks)
+        if st is None or not b:
+            return
+        vstate0 = np.asarray(st.vstate[0])
+        if not np.any(vstate0 == VM_TERMINATED):
+            return
+        rem0 = np.asarray(st.rem[0, :b], np.float64)
+        assign0 = np.asarray(st.assign[0, :b])
+        dead = vstate0[assign0] == VM_TERMINATED
+        orph = np.asarray(st.orph[0, :b], bool) \
+            if st.orph is not None else np.zeros(b, bool)
+        stranded = np.flatnonzero((rem0 > 0.0) & (dead | orph))
+        for j in stranded:
+            if int(j) in self._requeue_dead:
+                continue
+            self._records.append(
+                self._readmit(int(j), t_b, float(rem0[j])))
+
+    def _readmit(self, j: int, t_b: float, work: float) -> AdmissionRecord:
+        """One stranded task's fresh verdict: mirrors ``_admit`` (same
+        three-verdict pipeline, same ``insert_tasks`` destination
+        scoring) but re-admits the *remaining* checkpoint-floored work
+        and, on success, relocates the task in place (``reassign``
+        preserves per-scenario progress — unlike ``set_tasks`` it never
+        resets ``rem``).  The eviction guard still binds: a placement
+        that would push another admitted pending task past a deadline
+        the incumbent met is refused as CONGESTION."""
+        a = Arrival(t_b, self._tasks[j], self._deadline[j])
+        ok, ready, drain = self._column_view(t_b)
+        fits = a.task.memory_mb <= self._memv + 1e-6
+        ok = ok & fits
+        exec_s = work / self._speed
+        if self.arrival.admission == "always":
+            eta = ready + drain + exec_s
+            eta_ok = np.where(ok, eta, np.inf)
+            c = int(np.argmin(eta_ok))
+            if not np.isfinite(eta_ok[c]):
+                c = int(np.argmin(np.where(fits, eta, np.inf)))
+            return self._relocate(j, t_b, c, float(eta[c]))
+        empty_eta = np.where(ok, ready + exec_s, np.inf)
+        if float(np.min(empty_eta)) > a.deadline_s + 1e-9:
+            self._requeue_dead.add(j)
+            return AdmissionRecord(a.task.tid, t_b,
+                                   VERDICT_DEADLINE_MISSED, a.deadline_s,
+                                   float(np.min(empty_eta)), -1,
+                                   PROVENANCE_REQUEUED)
+        eta = ready + self.arrival.queue_bound * drain + exec_s
+        eta_ok = np.where(ok, eta, np.inf)
+        if float(np.min(eta_ok)) > a.deadline_s + 1e-9:
+            return AdmissionRecord(a.task.tid, t_b, VERDICT_CONGESTION,
+                                   a.deadline_s, float(np.min(eta_ok)),
+                                   -1, PROVENANCE_REQUEUED)
+        c = self._pick_column(a, t_b, work, eta_ok)
+        if not self._eviction_safe(t_b, np.array([j]), np.array([c])):
+            return AdmissionRecord(a.task.tid, t_b, VERDICT_CONGESTION,
+                                   a.deadline_s, float(eta[c]), -1,
+                                   PROVENANCE_REQUEUED)
+        return self._relocate(j, t_b, c, float(eta[c]))
+
+    def _relocate(self, j: int, t_b: float, c: int,
+                  eta: float) -> AdmissionRecord:
+        """Commit a successful re-admission: launch the destination if
+        needed and move the task there in every scenario, keeping each
+        scenario's remaining work."""
+        self._state = self._state.launch(
+            np.array([c]), t_b + self.cfg.boot_overhead_s)
+        self._state = jax.device_get(self._state.reassign(
+            np.array([j]), np.array([c], np.int32)))
+        self._assign[j] = int(c)
+        return AdmissionRecord(self._tasks[j].tid, t_b, VERDICT_SUCCESS,
+                               self._deadline[j], eta, int(c),
+                               PROVENANCE_REQUEUED)
+
     # -- warm-started replanning -------------------------------------------
     def _refine(self, t_b: float) -> None:
         """Warm-started batched-ILS pass over not-yet-started tasks,
@@ -660,6 +768,7 @@ class Service:
             t0 = time.perf_counter()
             self._state = jax.device_get(
                 self._state.at_slot(int(round(t_b / self.mc.dt))))
+            self._requeue_stranded(t_b)
             n_before = len(self._tasks)
             for a in folds[t_b]:
                 self._records.append(self._admit(a, t_b))
@@ -676,8 +785,14 @@ class Service:
     def _result(self, stream: list[Arrival], final: MCResult | None
                 ) -> ServiceResult:
         s = self.mc.n_scenarios
-        admitted = [r for r in self._records if r.verdict == VERDICT_SUCCESS]
+        arrivals_seen = [r for r in self._records
+                         if r.provenance == PROVENANCE_ARRIVAL]
+        admitted = [r for r in arrivals_seen
+                    if r.verdict == VERDICT_SUCCESS]
         n_adm = len(admitted)
+        n_req = sum(1 for r in self._records
+                    if r.provenance == PROVENANCE_REQUEUED
+                    and r.verdict == VERDICT_SUCCESS)
         if final is not None and self._state is not None:
             b = len(self._tasks)
             done = np.asarray(self._state.done_at[:, :b], np.float64)
@@ -698,10 +813,11 @@ class Service:
         span = max((a.time_s for a in stream), default=0.0)
         return ServiceResult(
             records=list(self._records), n_admitted=n_adm,
-            n_rejected=len(self._records) - n_adm,
+            n_rejected=len(arrivals_seen) - n_adm,
             admitted_per_s=n_adm / max(span, 1e-9),
             slo_met_frac=slo,
             replan_ms=np.asarray(self._replan_ms, np.float64),
             done_at_s=done, deadlines_s=dl,
             cost=np.asarray(cost), makespan_s=np.asarray(mkp),
-            unfinished=np.asarray(unfin, int), mc=final)
+            unfinished=np.asarray(unfin, int), mc=final,
+            n_requeued=n_req)

@@ -1,0 +1,134 @@
+"""Adversarial fault injection — deterministic chaos plans over the
+event-tensor contract (DESIGN.md §2.10).
+
+The market library (``sim.market``) samples *benign* stochastic regimes:
+Poisson singletons, Weibull bursts, Markov storms.  Chaos engineering
+asks the opposite question — what is the worst interruption pattern the
+scheduler must survive?  A ``FaultPlan`` is a :class:`MarketProcess`
+that authors its event tensor adversarially and **deterministically**
+(the PRNG key is ignored; every scenario sees the same storm), so a
+chaos run is a reproducible experiment, not a sample:
+
+* ``storm`` — periodic kill-the-loaded-VM waves: every ``period_s`` a
+  termination request for ``ceil(intensity · V)`` victims.  Scores are
+  uniform-positive, so the engine's eligibility rule (active ∧ spot ∧
+  booted, ties toward the lower column index — DESIGN.md §2.4) resolves
+  the wave onto exactly the live, work-bearing spot columns.
+* ``deadline_mass`` — one correlated mass-termination at a
+  deadline-critical instant (``at_frac`` of the horizon): the worst
+  moment to lose state, since little slack remains to re-run rolled-back
+  work.
+* ``flap`` — hibernate-then-terminate flapping: each cycle hibernates a
+  wave, resumes it ``flap_gap_s`` later, then terminates it one gap
+  after that — maximizing checkpoint rollbacks and migration churn
+  before the state is finally lost.
+
+Fault *intensity* is the blast-radius fraction of the fleet per wave.
+Because the fire instants and the score ranking are intensity-invariant,
+the event set at intensity ``a`` is a **superset** of the set at
+``b < a`` — the structural guarantee behind ``run_chaos_suite``'s
+monotone-degradation invariant (``repro.chaos``).
+
+A ``FaultPlan`` drops into every tensor consumer unchanged: the MC
+engine, the fleet pipeline and the megabatch grid all treat it as one
+more market process.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from .market import EventTensor, EventTensorError, MarketProcess
+
+#: fault-plan vocabulary (module docstring; DESIGN.md §2.10)
+FAULT_KINDS = ("storm", "deadline_mass", "flap")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan(MarketProcess):
+    """One adversarial interruption schedule (module docstring).
+
+    ``intensity`` ∈ [0, 1] scales the per-wave blast radius
+    (``ceil(intensity · V)`` victims; 0 = no faults, 1 = every eligible
+    column).  ``period_s`` is the storm/flap cadence, ``at_frac`` the
+    ``deadline_mass`` fire instant as a fraction of the horizon, and
+    ``flap_gap_s`` the hibernate→resume→terminate spacing (quantized to
+    at least one slot: a hibernated column is not terminate-eligible, so
+    the resume must land strictly between).
+    """
+
+    kind: str = "storm"
+    intensity: float = 0.5
+    period_s: float = 600.0
+    at_frac: float = 0.75
+    flap_gap_s: float = 120.0
+    name: str = "chaos"
+    termination_frac: float = 0.0   # plans author term_k directly
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.kind not in FAULT_KINDS:
+            raise EventTensorError(
+                f"FaultPlan(name={self.name!r}): unknown kind "
+                f"{self.kind!r}; fault kinds are {sorted(FAULT_KINDS)}")
+        if not 0.0 <= float(self.intensity) <= 1.0:
+            raise EventTensorError(
+                f"FaultPlan(name={self.name!r}): intensity="
+                f"{self.intensity!r} must lie in [0, 1]")
+        if not 0.0 < float(self.at_frac) < 1.0:
+            raise EventTensorError(
+                f"FaultPlan(name={self.name!r}): at_frac="
+                f"{self.at_frac!r} must lie in (0, 1)")
+
+    def n_victims(self, v: int) -> int:
+        """Per-wave blast radius on a ``v``-column fleet."""
+        return min(v, int(math.ceil(self.intensity * v)))
+
+    def _wave_slots(self, n_slots: int, dt: float,
+                    deadline_s: float) -> list[int]:
+        """Fire slots for the periodic kinds (storm / flap cycles)."""
+        out, t = [], self.period_s
+        while t < deadline_s and int(t // dt) < n_slots:
+            out.append(int(t // dt))
+            t += self.period_s
+        return out
+
+    def _sample(self, key, *, s, n_slots, v, dt, deadline_s) -> EventTensor:
+        del key                       # deterministic adversary by design
+        k = self.n_victims(v)
+        hib_k = np.zeros(n_slots, np.int32)
+        res_k = np.zeros(n_slots, np.int32)
+        term_k = np.zeros(n_slots, np.int32)
+        if k > 0:
+            if self.kind == "storm":
+                for n in self._wave_slots(n_slots, dt, deadline_s):
+                    term_k[n] = k
+            elif self.kind == "deadline_mass":
+                n = int((self.at_frac * deadline_s) // dt)
+                if 0 <= n < n_slots:
+                    term_k[n] = k
+            else:                     # flap
+                gap = max(1, int(round(self.flap_gap_s / dt)))
+                for n in self._wave_slots(n_slots, dt, deadline_s):
+                    hib_k[n] = k
+                    if n + gap < n_slots and (n + gap) * dt < deadline_s:
+                        res_k[n + gap] = k
+                    if n + 2 * gap < n_slots and \
+                            (n + 2 * gap) * dt < deadline_s:
+                        term_k[n + 2 * gap] = k
+        tile_k = lambda a: jnp.tile(jnp.asarray(a)[None], (s, 1))
+        ones = jnp.ones((s, n_slots, v), jnp.float32)
+        return EventTensor(tile_k(hib_k), ones, tile_k(res_k), ones,
+                           None, tile_k(term_k), ones)
+
+
+def fault_grid(kinds=FAULT_KINDS, intensities=(0.0, 0.4, 0.8), **kw
+               ) -> list[FaultPlan]:
+    """The kind × intensity plan grid ``run_chaos_suite`` sweeps; extra
+    keywords are forwarded to every :class:`FaultPlan`."""
+    return [FaultPlan(kind=k, intensity=float(i),
+                      name=f"{k}@{float(i):.2f}", **kw)
+            for k in kinds for i in intensities]

@@ -257,6 +257,18 @@ class MarketProcess:
 
     name: str = "market"
 
+    def __post_init__(self):
+        # Subclasses are dataclasses, so their generated __init__ invokes
+        # this through the MRO: an out-of-[0,1] mix knob fails at
+        # construction with the process named, instead of flowing
+        # silently into Bernoulli sampling (`dataclasses.replace` builds
+        # a fresh instance, so replaced knobs revalidate too).
+        frac = getattr(self, "termination_frac", 0.0)
+        if frac is None or not 0.0 <= float(frac) <= 1.0:
+            raise EventTensorError(
+                f"{type(self).__name__}(name={getattr(self, 'name', '?')!r})"
+                f": termination_frac={frac!r} must lie in [0, 1]")
+
     @property
     def fingerprint(self) -> int:
         """Stable 32-bit fingerprint of the full parameterization.
@@ -515,6 +527,13 @@ class CorrelatedShockProcess(MarketProcess):
     name: str = "shock"
     termination_frac: float = 0.0
 
+    def __post_init__(self):
+        super().__post_init__()
+        if not 0.0 <= float(self.severity) <= 1.0:
+            raise EventTensorError(
+                f"{type(self).__name__}(name={self.name!r}): "
+                f"severity={self.severity!r} must lie in [0, 1]")
+
     def _sample(self, key, *, s, n_slots, v, dt, deadline_s) -> EventTensor:
         p_shock = min(1.0, self.k_shock * dt / deadline_s)
         ph_base = min(1.0, self.k_h_base * dt / deadline_s)
@@ -583,6 +602,7 @@ class TraceReplayProcess(MarketProcess):
     termination_frac: float = 0.0
 
     def __post_init__(self):
+        super().__post_init__()
         if not (len(self.times) == len(self.kinds) == len(self.vms)):
             raise EventTensorError("times/kinds/vms length mismatch")
         bad = set(self.kinds) - set(ALLOWED_EVENT_KINDS)

@@ -121,7 +121,17 @@ class MCParams:
     testing.  Under ``"slot"`` ``dt`` must divide both the boot overhead
     and the Allocation Cycle so AC boundaries land on slot edges; the
     adaptive engine lifts that restriction (boundaries are jump targets,
-    not grid points)."""
+    not grid points).
+
+    ``orphan_retry`` bounds the fault-recovery ledger (DESIGN.md §2.10):
+    tasks whose Alg. 4 migration group found no feasible destination
+    after a spot termination are recorded as *orphans* and re-attempted
+    at every subsequent full step, mirroring the DES retry queue; the
+    bound counts retry passes that actually *moved* work (infeasible
+    no-op passes stay free, so orphans keep waiting for capacity).  The
+    whole ledger is trace-time gated on the tensor's terminate direction
+    — termination-free tensors add no ledger state or retry ops to the
+    compiled program (the legacy goldens stay numerically exact)."""
 
     n_scenarios: int = 256
     dt: float = 30.0
@@ -131,6 +141,10 @@ class MCParams:
     hads_margin_s: float = 30.0   # deferred-migration safety margin
     steal_rounds: int = 2         # Alg. 5 attempts per AC boundary
     mig_rounds: int = 8           # Alg. 4 argmin rounds (bag fan-out width)
+    orphan_retry: int = 16        # max *successful* orphan-retry passes
+    dest_cascade: bool = False    # DES-literal Alg. 4 attempt order + the
+    # check_migration deadline gate in _dest_column (parity mode); the
+    # default drain-argmin scoring is pinned by the legacy goldens
     stepping: str = "adaptive"    # "adaptive" (event-horizon) | "slot"
     use_kernel: bool | None = None  # None: Pallas on accelerators, jnp on CPU
     interpret: bool | None = None   # None: interpret only on CPU
@@ -164,6 +178,11 @@ class EngineState:
     n_hib: jnp.ndarray     # i32 [S]
     n_res: jnp.ndarray     # i32 [S]
     n_term: jnp.ndarray    # i32 [S]
+    #: bool [S, B] fault-recovery orphan mask (DESIGN.md §2.10): tasks
+    #: stranded by an infeasible post-termination migration, awaiting a
+    #: retry pass (engine) or re-admission (service).  ``None`` on runs
+    #: whose tensor carries no terminate direction.
+    orph: jnp.ndarray | None = None
 
     @property
     def n_scenarios(self) -> int:
@@ -207,7 +226,10 @@ class EngineState:
                           (s, 1))], axis=1),
             done_at=jnp.concatenate(
                 [self.done_at,
-                 jnp.full((s, t), BIG, self.done_at.dtype)], axis=1))
+                 jnp.full((s, t), BIG, self.done_at.dtype)], axis=1),
+            orph=None if self.orph is None else jnp.concatenate(
+                [jnp.asarray(self.orph, bool),
+                 jnp.zeros((s, t), bool)], axis=1))
 
     def set_tasks(self, idx, total, assign, mode) -> "EngineState":
         """Write admitted tasks into existing (inert pad) task slots
@@ -222,7 +244,28 @@ class EngineState:
                 jnp.asarray(assign, jnp.int32)[None]),
             mode=jnp.asarray(self.mode).at[:, ix].set(
                 jnp.asarray(mode, jnp.int32)[None]),
-            done_at=jnp.asarray(self.done_at).at[:, ix].set(BIG))
+            done_at=jnp.asarray(self.done_at).at[:, ix].set(BIG),
+            orph=None if self.orph is None else
+            jnp.asarray(self.orph, bool).at[:, ix].set(False))
+
+    def reassign(self, idx, cols) -> "EngineState":
+        """Move existing tasks ``idx`` to new columns ``cols`` keeping
+        their *per-scenario* remaining work — the service layer's
+        re-admission of orphans stranded on terminated columns
+        (DESIGN.md §2.10).  Unlike ``set_tasks`` (which writes fresh full
+        work), progress is preserved exactly as the engine left it (the
+        checkpoint floor was applied at termination time); the exec mode
+        resets to base and the orphan flag clears.  Scenarios where the
+        task already finished keep their completion record — moving a
+        done task's column is inert (no pending work, no billing)."""
+        ix = jnp.asarray(idx, jnp.int32)
+        cs = jnp.asarray(cols, jnp.int32)
+        return dataclasses.replace(
+            self,
+            assign=jnp.asarray(self.assign).at[:, ix].set(cs[None]),
+            mode=jnp.asarray(self.mode).at[:, ix].set(0),
+            orph=None if self.orph is None else
+            jnp.asarray(self.orph, bool).at[:, ix].set(False))
 
     def pad_tasks(self, b_pad: int) -> "EngineState":
         """Grow the task axis to ``b_pad`` with inert pads (no remaining
@@ -281,6 +324,13 @@ class MCResult:
     visited: np.ndarray | None = None     # bool [S, n_slots] stepped mask
     n_terminations: np.ndarray | None = None  # int [S] spot terminations
     state: EngineState | None = None      # mid-horizon state at stop_s
+    #: fault-recovery outcomes (§2.10): tasks still stranded on a dead
+    #: column at exit, successful retry passes, and completed tasks —
+    #: ``n_done + unfinished == n_tasks`` is the conservation invariant
+    #: the chaos harness asserts (zeros on termination-free tensors)
+    n_orphans: np.ndarray | None = None   # int [S] stranded at exit
+    retry_rounds: np.ndarray | None = None  # int [S] successful retries
+    n_done: np.ndarray | None = None      # int [S] completed tasks
 
     @property
     def n(self) -> int:
@@ -446,11 +496,22 @@ def _rowp_helpers(ref):
 
 
 def _dest_column(load, vstate, boot, credits, aff_load, aff_mem, arr, sc, t,
-                 *, allow_burstable: bool):
+                 *, allow_burstable: bool, cascade: bool = False,
+                 dl2=None):
     """Alg. 4's cascade as one argmin-over-columns rule: score every column
     by projected drain time (+ remaining boot, + a price tie-break for
     fresh launches, - a small burstable preference), mask the ineligible
-    ones, argmin.  Returns (dest [S], feasible [S])."""
+    ones, argmin.  Returns (dest [S], feasible [S]).
+
+    ``cascade=True`` (``MCParams.dest_cascade``) scores by the DES's
+    literal Alg. 4 attempt order instead — idle burstable → idle
+    non-burstable (spot first) → busy non-burstable (spot first) → fresh
+    cheapest on-demand launch, every attempt gated by the
+    ``check_migration`` deadline rule (projected completion ≤ D, so a
+    late migration with no deadline-feasible destination is *infeasible*
+    and falls to the §2.10 orphan-retry ledger, exactly like a DES
+    migration failure).  Off by default: the legacy goldens pin the
+    drain-argmin scores; the DES-parity suites opt in."""
     cores, speed = arr["cores"], arr["speed"]
     burst, odm, memv, price = (arr["burst"], arr["odm"], arr["memv"],
                                arr["price"])
@@ -463,14 +524,43 @@ def _dest_column(load, vstate, boot, credits, aff_load, aff_mem, arr, sc, t,
         ok_active &= ~bc(burst) | cred_ok
     else:
         ok_active &= ~bc(burst)
-    ok_new = (vstate == NOT_LAUNCHED) & bc(odm) & fits
+    # A dynamic on-demand slot is *reusable*: the DES allocates a fresh
+    # VM object per launch, so releasing one (AC idle termination — the
+    # only way an on-demand column dies, market terminations target spot)
+    # never shrinks launchable capacity.  The column analogue is letting a
+    # TERMINATED on-demand column relaunch; without this, a late deferred
+    # migration whose odm pool was used and drained earlier finds no
+    # destination ever and the bag strands (DESIGN.md §2.10).
+    ok_new = ((vstate == NOT_LAUNCHED) | (vstate == VM_TERMINATED)) \
+        & bc(odm) & fits
 
     drain = load / bc(cores * speed)
     boot_left = jnp.clip(boot - t[:, None], 0.0, sc["omega"])
-    score = jnp.where(
-        ok_active,
-        drain + boot_left - jnp.where(bc(burst), 1.0, 0.0),
-        jnp.where(ok_new, sc["omega"] + bc(price) * 3600.0, BIG))
+    if cascade:
+        spot_c, is_b = bc(arr["spot"]), bc(burst)
+        idle = load <= 1e-6
+        # check_migration's completion bound, per destination class
+        comp = t[:, None] + boot_left + \
+            (load + aff_load[:, None]) / bc(cores * speed)
+        ok_active &= comp <= dl2 + 1e-6   # dl2: [S, 1] (rowp) or scalar
+        if allow_burstable:
+            ok_active &= ~is_b | idle    # Alg. 4 never queues a burstable
+        comp_new = t[:, None] + sc["omega"] + \
+            (aff_load[:, None] + sc["restore"]) / bc(cores * speed)
+        ok_new &= comp_new <= dl2 + 1e-6
+        # attempt tiers; argmin's lower-index tie-break IS the DES's
+        # lowest-uid pick within a tier, and the price term its
+        # cheapest-first launch order
+        tier = jnp.where(is_b, 0.0,
+                         jnp.where(idle, 0.0, 2.0)
+                         + jnp.where(spot_c, 1.0, 2.0))
+        score = jnp.where(ok_active, tier,
+                          jnp.where(ok_new, 5.0 + bc(price), BIG))
+    else:
+        score = jnp.where(
+            ok_active,
+            drain + boot_left - jnp.where(bc(burst), 1.0, 0.0),
+            jnp.where(ok_new, sc["omega"] + bc(price) * 3600.0, BIG))
     dest = jnp.argmin(score, axis=1).astype(jnp.int32)
     feasible = jnp.min(score, axis=1) < BIG * 0.5
     return dest, feasible
@@ -485,10 +575,14 @@ def _checkpoint_floor(rem, total, cp, mask):
 
 
 def _apply_launch(vstate, boot, dest, do, t, sc, iota_v):
-    """Launch ``dest`` columns that were NOT_LAUNCHED (dynamic on-demand).
+    """Launch ``dest`` columns that were NOT_LAUNCHED or released
+    (TERMINATED on-demand — a recycled dynamic slot, see ``_dest_column``).
+    Only ``_dest_column``-feasible dests reach here with ``do`` set, so the
+    state guard below can never resurrect a market-terminated spot column.
     ``t`` is per-scenario [S] — scenarios step their own clocks under
     event-horizon stepping (DESIGN.md §2.5)."""
-    hit = do[:, None] & (iota_v == dest[:, None]) & (vstate == NOT_LAUNCHED)
+    hit = do[:, None] & (iota_v == dest[:, None]) & \
+        ((vstate == NOT_LAUNCHED) | (vstate == VM_TERMINATED))
     vstate = jnp.where(hit, VM_ACTIVE, vstate)
     boot = jnp.where(hit, t[:, None] + sc["omega"], boot)
     return vstate, boot
@@ -496,26 +590,38 @@ def _apply_launch(vstate, boot, dest, do, t, sc, iota_v):
 
 def _migrate_spread(do_ev, aff, rem, load, vstate, boot, credits, assign,
                     mode, rcv, arr, sc, t1, *, allow_burstable: bool,
-                    rounds: int):
+                    rounds: int, track_moved: bool = False,
+                    cascade: bool = False, dl2=None):
     """Vectorized Alg. 4: checkpoint rollback, then ``rounds`` argmin
     re-assignment rounds — group g (every rounds-th affected task) goes to
     the current argmin column, whose projected load is then updated — so a
-    hibernated bag fans out instead of dog-piling one target."""
+    hibernated bag fans out instead of dog-piling one target.
+
+    ``track_moved=True`` additionally returns the [S, B] mask of tasks a
+    round actually re-placed — what the fault-recovery ledger needs to
+    tell a stranded group (infeasible: nothing mutated) from a recovered
+    one (DESIGN.md §2.10).  The accumulation is pure bookkeeping on
+    already-computed masks, so the six shared outputs stay bit-identical
+    either way."""
     total, cp, mem_t, speed = arr["total"], arr["cp"], arr["mem_t"], \
         arr["speed"]
     _, g1, bc = _rowp_helpers(speed)
     iota_v = jnp.arange(vstate.shape[1])[None]
     rem = _checkpoint_floor(rem, total, cp, aff & do_ev[:, None])
     aff_rank = jnp.cumsum(aff.astype(jnp.int32), axis=1) - 1
+    moved_all = jnp.zeros_like(aff) if track_moved else None
     for g in range(rounds):
         mg = aff & (aff_rank % rounds == g)
         load_g = jnp.sum(jnp.where(mg, rem, 0.0), axis=1)
         mem_g = jnp.max(jnp.where(mg, bc(mem_t), 0.0), axis=1)
         dest, feasible = _dest_column(load, vstate, boot, credits, load_g,
                                       mem_g, arr, sc, t1,
-                                      allow_burstable=allow_burstable)
+                                      allow_burstable=allow_burstable,
+                                      cascade=cascade, dl2=dl2)
         do_g = do_ev & jnp.any(mg, axis=1) & feasible
         moved = mg & do_g[:, None]
+        if track_moved:
+            moved_all = moved_all | moved
         has_prog = (bc(total) - rem) > 1e-6
         rem = rem + jnp.where(moved & has_prog,
                               sc["restore"] * g1(speed, dest)[:, None], 0.0)
@@ -526,6 +632,8 @@ def _migrate_spread(do_ev, aff, rem, load, vstate, boot, credits, assign,
         hit = do_g[:, None] & (iota_v == dest[:, None])
         load = load + jnp.where(hit, (load_g + sc["restore"])[:, None], 0.0)
         rcv = rcv | hit
+    if track_moved:
+        return rem, assign, mode, vstate, boot, rcv, moved_all
     return rem, assign, mode, vstate, boot, rcv
 
 
@@ -552,6 +660,7 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor,
                  policy: PolicyConfig, steal_rounds: int, mig_rounds: int,
                  mem_safe: bool, use_kernel: bool, interpret: bool,
                  stepping: str, ac_aligned: bool,
+                 orphan_retry: int = 16, dest_cascade: bool = False,
                  return_state: bool = False) -> dict:
     total, mem_t = arr["total"], arr["mem_t"]
     price, cores, speed = arr["price"], arr["cores"], arr["speed"]
@@ -574,6 +683,11 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor,
     # trace-time gate: a termination-free tensor (term_k is None) compiles
     # to exactly the historical pre-termination program (§2.8)
     has_term = ev.term_k is not None
+    # fault-recovery ledger gate (§2.10): carried on terminating tensors,
+    # and on re-entry from a state that already holds orphans (a service
+    # fold whose later tensor slice happens to be termination-free must
+    # still retry the strandings of the earlier one)
+    track_orph = has_term or (state is not None and state.orph is not None)
     n_slots = ev.hib_k.shape[1]
     # per-row deadline broadcasts against [S, V] work maxima in the
     # deferred-HADS safe-time rule; a scalar everywhere else
@@ -609,6 +723,9 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor,
             jnp.int32(0),                                         # n_steps
             jnp.zeros((s, n_slots), bool),                        # visited
         )
+        if track_orph:
+            carry = carry + (jnp.zeros((s, b), bool),             # orph
+                             jnp.zeros(s, jnp.int32))             # oret
     else:
         # re-enter from an extracted state: scenarios that exited early
         # (no pending work) clock-forward to slot0 — exact, nothing can
@@ -629,6 +746,13 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor,
             jnp.int32(0),                                         # n_steps
             jnp.zeros((s, n_slots), bool),                        # visited
         )
+        if track_orph:
+            # the retry-round counter restarts per segment — the bound
+            # caps per-segment move churn, not the orphan's total wait
+            carry = carry + (
+                jnp.asarray(state.orph, bool) if state.orph is not None
+                else jnp.zeros((s, b), bool),                     # orph
+                jnp.zeros(s, jnp.int32))                          # oret
 
     def cond(c):
         # a scenario is live while it has pending work inside the horizon
@@ -638,7 +762,9 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor,
 
     def step(c):
         (i, vstate, boot, billed, credits, rem, assign, mode, done_at,
-         nhib, nres, nterm, nsteps, visited) = c
+         nhib, nres, nterm, nsteps, visited) = c[:14]
+        if track_orph:
+            orph, oret = c[14], c[15]
 
         pending = rem > 0.0
         # a row is live while it has pending work *inside* the horizon
@@ -905,19 +1031,26 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor,
             aff_t = jnp.take_along_axis(trm, assign, axis=1) & (rem2 > 0)
 
             def migt(ops):
-                rem2, assign, mode, vstate, boot, rcv = ops
+                rem2, assign, mode, vstate, boot, rcv, orph = ops
                 load = mc_vm_stats(assign, rem2, v=v,
                                    interpret=interpret)[0] \
                     if use_kernel else col_sum(rem2 * (rem2 > 0))
-                return _migrate_spread(
+                (rem2, assign, mode, vstate, boot, rcv,
+                 moved) = _migrate_spread(
                     do_trm, aff_t, rem2, load, vstate, boot, credits,
                     assign, mode, rcv, arr, sc, t1,
                     allow_burstable=policy.use_burstables,
-                    rounds=mig_rounds)
+                    rounds=mig_rounds, track_moved=True,
+                    cascade=dest_cascade, dl2=dl2)
+                # ledger (§2.10): an affected task no round re-placed is
+                # stranded on its (now dead) column — record it for the
+                # retry pass below / service re-admission
+                orph = orph | (aff_t & ~moved)
+                return rem2, assign, mode, vstate, boot, rcv, orph
 
-            (rem2, assign, mode, vstate, boot, rcv) = jax.lax.cond(
+            (rem2, assign, mode, vstate, boot, rcv, orph) = jax.lax.cond(
                 jnp.any(aff_t), migt, lambda ops: ops,
-                (rem2, assign, mode, vstate, boot, rcv))
+                (rem2, assign, mode, vstate, boot, rcv, orph))
 
         # ---- hibernation events (victims: requested count resolved
         # against the live eligible set — active, booted, spot) -----------
@@ -933,19 +1066,35 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor,
                 (rem2 > 0)
 
             def mig(ops):
-                rem2, assign, mode, vstate, boot, rcv = ops
+                if track_orph:
+                    rem2, assign, mode, vstate, boot, rcv, orph = ops
+                else:
+                    rem2, assign, mode, vstate, boot, rcv = ops
                 load = mc_vm_stats(assign, rem2, v=v,
                                    interpret=interpret)[0] \
                     if use_kernel else col_sum(rem2 * (rem2 > 0))
-                return _migrate_spread(
+                out = _migrate_spread(
                     do_hib, affected, rem2, load, vstate, boot, credits,
                     assign, mode, rcv, arr, sc, t1,
                     allow_burstable=policy.use_burstables,
-                    rounds=mig_rounds)
+                    rounds=mig_rounds, track_moved=track_orph,
+                    cascade=dest_cascade, dl2=dl2)
+                if track_orph:
+                    # ledger (§2.10): a group no round re-placed stays
+                    # frozen on its hibernated column — retry below
+                    rem2, assign, mode, vstate, boot, rcv, moved = out
+                    return (rem2, assign, mode, vstate, boot, rcv,
+                            orph | (affected & ~moved))
+                return out
 
-            (rem2, assign, mode, vstate, boot, rcv) = jax.lax.cond(
-                jnp.any(affected), mig, lambda ops: ops,
-                (rem2, assign, mode, vstate, boot, rcv))
+            ops0 = (rem2, assign, mode, vstate, boot, rcv) + \
+                ((orph,) if track_orph else ())
+            out = jax.lax.cond(jnp.any(affected), mig,
+                               lambda ops: ops, ops0)
+            if track_orph:
+                (rem2, assign, mode, vstate, boot, rcv, orph) = out
+            else:
+                (rem2, assign, mode, vstate, boot, rcv) = out
         # else: freeze in place (HADS) — tasks stay attached, no progress
         # while the column is hibernated, exact progress preserved.
 
@@ -967,18 +1116,34 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor,
             do2 = jnp.any(aff2, axis=1)
 
             def defer(ops):
-                rem2, assign, mode, vstate, boot, rcv = ops
+                if track_orph:
+                    rem2, assign, mode, vstate, boot, rcv, orph = ops
+                else:
+                    rem2, assign, mode, vstate, boot, rcv = ops
                 load = mc_vm_stats(assign, rem2, v=v,
                                    interpret=interpret)[0] \
                     if use_kernel else col_sum(rem2 * (rem2 > 0))
-                return _migrate_spread(
+                out = _migrate_spread(
                     do2, aff2, rem2, load, vstate, boot, credits, assign,
                     mode, rcv, arr, sc, t1, allow_burstable=False,
-                    rounds=mig_rounds)
+                    rounds=mig_rounds, track_moved=track_orph,
+                    cascade=dest_cascade, dl2=dl2)
+                if track_orph:
+                    # ledger (§2.10): a fired-but-infeasible deferred bag
+                    # is past its safe instant — every later boundary's
+                    # retry is its only remaining route to completion
+                    rem2, assign, mode, vstate, boot, rcv, moved = out
+                    return (rem2, assign, mode, vstate, boot, rcv,
+                            orph | (aff2 & ~moved))
+                return out
 
-            (rem2, assign, mode, vstate, boot, rcv) = jax.lax.cond(
-                jnp.any(aff2), defer, lambda ops: ops,
-                (rem2, assign, mode, vstate, boot, rcv))
+            ops0 = (rem2, assign, mode, vstate, boot, rcv) + \
+                ((orph,) if track_orph else ())
+            out = jax.lax.cond(jnp.any(aff2), defer, lambda ops: ops, ops0)
+            if track_orph:
+                (rem2, assign, mode, vstate, boot, rcv, orph) = out
+            else:
+                (rem2, assign, mode, vstate, boot, rcv) = out
 
         # ---- Allocation-Cycle boundary: work stealing + idle termination
         # is_ac is per-scenario [S] — scenarios on different clocks reach
@@ -1036,31 +1201,94 @@ def _mc_run_impl(arr: dict, sc: dict, ev: EventTensor,
             jnp.any(is_ac), ac_block, lambda ops: ops,
             (vstate, assign, mode))
 
+        if track_orph:
+            # ---- fault-recovery retry (§2.10): re-attempt Alg. 4 for
+            # orphans still stranded on a non-running column.  Runs at
+            # every full step — under adaptive stepping those ARE the
+            # event/AC boundaries, matching the DES retry hooks (boot
+            # done / resume / AC check), and a step where capacity has
+            # not returned is an infeasible no-op (nothing mutates, the
+            # round bound is not consumed).  Ordered after the AC block
+            # so destinations reflect this slot's resumes, launches and
+            # idle terminations — the same world the DES retries see.
+            # stuck = parked on any non-running column: terminated (both
+            # ledger sites) or still hibernated (a deferred bag past its
+            # safe instant).  An orphan whose column resumed or that a
+            # steal re-placed is live again — excluded here, and its stale
+            # ledger bit is dropped so a later hibernation of its new
+            # column doesn't resurrect it.
+            stuck = jnp.take_along_axis(vstate != VM_ACTIVE, assign,
+                                        axis=1)
+            orph = orph & stuck
+            want = orph & (rem2 > 0.0) & gate[:, None]
+            can = jnp.any(want, axis=1) & (oret < orphan_retry)
+
+            def retry(ops):
+                rem2, assign, mode, vstate, boot, rcv, orph, oret = ops
+                load = mc_vm_stats(assign, rem2, v=v,
+                                   interpret=interpret)[0] \
+                    if use_kernel else col_sum(rem2 * (rem2 > 0))
+                (rem2, assign, mode, vstate, boot, rcv,
+                 moved) = _migrate_spread(
+                    can, want, rem2, load, vstate, boot, credits,
+                    assign, mode, rcv, arr, sc, t1,
+                    allow_burstable=policy.use_burstables,
+                    rounds=mig_rounds, track_moved=True,
+                    cascade=dest_cascade, dl2=dl2)
+                orph = orph & ~moved
+                oret = oret + jnp.any(moved, axis=1).astype(jnp.int32)
+                return rem2, assign, mode, vstate, boot, rcv, orph, oret
+
+            (rem2, assign, mode, vstate, boot, rcv, orph,
+             oret) = jax.lax.cond(
+                jnp.any(want & can[:, None]), retry, lambda ops: ops,
+                (rem2, assign, mode, vstate, boot, rcv, orph, oret))
+
         # exited rows park at their own exit slot — under the
         # row-parametric layout that can sit strictly inside the padded
         # slot axis, so route them to the (dropped) pad index explicitly;
         # for the legacy layout i == max_slots == n_slots was already out
         # of range
         i_mark = jnp.where(i < stop, i - slot0, n_slots)
-        return (jnp.minimum(i1, stop), vstate, boot, billed,
-                credits, rem2, assign, mode, done_at, nhib, nres, nterm,
-                nsteps + 1, visited.at[rows, i_mark].set(True, mode="drop"))
+        nxt = (jnp.minimum(i1, stop), vstate, boot, billed,
+               credits, rem2, assign, mode, done_at, nhib, nres, nterm,
+               nsteps + 1, visited.at[rows, i_mark].set(True, mode="drop"))
+        if track_orph:
+            nxt = nxt + (orph, oret)
+        return nxt
 
     out = jax.lax.while_loop(cond, step, carry)
     (i_fin, vstate_f, boot_f, billed, credits_f, rem, assign_f, mode_f,
-     done_at, nhib, nres, nterm, nsteps, visited) = out
+     done_at, nhib, nres, nterm, nsteps, visited) = out[:14]
     makespan = jnp.max(jnp.where(done_at < BIG * 0.5, done_at, 0.0), axis=1)
+    if track_orph:
+        orph_f, oret_f = out[14], out[15]
+        # stranded = still orphaned, unfinished, and parked on a non-
+        # running column at exit (the retry pass drops the ledger bit of
+        # any orphan whose column came back, so live bits here are real
+        # fault losses, not deadline misses)
+        stuck_f = jnp.take_along_axis(vstate_f != VM_ACTIVE, assign_f,
+                                      axis=1)
+        n_orphan = jnp.sum(orph_f & (rem > 0.0) & stuck_f, axis=1)
+        n_retry = oret_f
+    else:
+        orph_f = None
+        n_orphan = jnp.zeros(s, jnp.int32)
+        n_retry = jnp.zeros(s, jnp.int32)
     res = {"cost": jnp.sum(billed * bc(price), axis=1),
            "makespan": makespan,
            "unfinished": jnp.sum(rem > 0.0, axis=1),
            "billed": billed, "n_hib": nhib, "n_res": nres,
            "n_term": nterm, "n_steps": nsteps, "exit_slots": i_fin,
-           "visited": visited}
+           "visited": visited,
+           "n_done": jnp.sum(done_at < BIG * 0.5, axis=1),
+           "n_orphan": n_orphan, "n_retry": n_retry}
     if return_state:
         res["state"] = EngineState(
             slot=i_fin, vstate=vstate_f, boot=boot_f, billed=billed,
             credits=credits_f, rem=rem, assign=assign_f, mode=mode_f,
-            done_at=done_at, n_hib=nhib, n_res=nres, n_term=nterm)
+            done_at=done_at, n_hib=nhib, n_res=nres, n_term=nterm,
+            orph=orph_f)
     return res
 
 
@@ -1075,7 +1303,7 @@ def _mc_jit(donate: bool):
     return jax.jit(_mc_run_impl, static_argnames=(
         "s", "policy", "steal_rounds", "mig_rounds", "mem_safe",
         "use_kernel", "interpret", "stepping", "ac_aligned",
-        "return_state"),
+        "orphan_retry", "dest_cascade", "return_state"),
         donate_argnums=(2,) if donate else ())
 
 
@@ -1231,6 +1459,8 @@ def run_mc_events(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
         use_kernel=use_kernel, interpret=interpret,
         stepping=params.stepping,
         ac_aligned=_dt_aligned(cfg, params.dt),
+        orphan_retry=params.orphan_retry,
+        dest_cascade=params.dest_cascade,
         return_state=want_state)
     out = jax.device_get(out)
     unfinished = out["unfinished"].astype(int)
@@ -1247,7 +1477,10 @@ def run_mc_events(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
         stepping=params.stepping, n_steps=int(out["n_steps"]),
         exit_slots=out["exit_slots"].astype(int), visited=out["visited"],
         n_terminations=out["n_term"].astype(int),
-        state=out.get("state"))
+        state=out.get("state"),
+        n_orphans=out["n_orphan"].astype(int),
+        retry_rounds=out["n_retry"].astype(int),
+        n_done=out["n_done"].astype(int))
 
 
 def run_mc(job: Job, plan: PrimaryPlan, cfg: CloudConfig,

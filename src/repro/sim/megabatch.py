@@ -122,6 +122,9 @@ class _Cell:
     nhib: list = dataclasses.field(default_factory=list)
     nres: list = dataclasses.field(default_factory=list)
     nterm: list = dataclasses.field(default_factory=list)
+    ndone: list = dataclasses.field(default_factory=list)
+    norph: list = dataclasses.field(default_factory=list)
+    nretry: list = dataclasses.field(default_factory=list)
     covered: int = 0
     stepped: int = 0
     done: bool = False
@@ -137,6 +140,9 @@ class _Cell:
         self.nhib.append(out["n_hib"][sl].astype(int))
         self.nres.append(out["n_res"][sl].astype(int))
         self.nterm.append(out["n_term"][sl].astype(int))
+        self.ndone.append(out["n_done"][sl].astype(int))
+        self.norph.append(out["n_orphan"][sl].astype(int))
+        self.nretry.append(out["n_retry"][sl].astype(int))
         self.covered += int(out["exit_slots"][sl].sum())
         self.stepped += int(out["visited"][sl].sum())
 
@@ -153,6 +159,7 @@ class _Cell:
         cost = np.concatenate(self.cost)
         mkp = np.concatenate(self.makespan)
         unf = np.concatenate(self.unfinished)
+        ndone = np.concatenate(self.ndone)
         met = (unf == 0) & (mkp <= deadline_s + dt + 1e-6)
         return {"job": self.job.name, "policy": self.policy.name,
                 "process": self.process.name, "s": len(cost), "dt": dt,
@@ -167,6 +174,18 @@ class _Cell:
                     float(np.mean(np.concatenate(self.nres))),
                 "mean_terminations":
                     float(np.mean(np.concatenate(self.nterm))),
+                # fault-recovery accounting (§2.10): conservation means
+                # every task either completed or is reported unfinished —
+                # in every scenario — and stranded counts the orphans the
+                # retry ledger never recovered (the chaos/bench gates
+                # require stranded_tasks == 0)
+                "n_tasks": self.job.n_tasks,
+                "stranded_tasks":
+                    int(np.concatenate(self.norph).sum()),
+                "orphan_retry_rounds_mean":
+                    float(np.mean(np.concatenate(self.nretry))),
+                "work_conserved":
+                    bool(np.all(ndone + unf == self.job.n_tasks)),
                 "slots_skipped_frac": round(
                     1.0 - self.stepped / max(1, self.covered), 3)}
 
@@ -290,7 +309,8 @@ def _run_fused(arr, sc, ev, view, params: MCParams, cfg: CloudConfig,
         steal_rounds=params.steal_rounds, mig_rounds=params.mig_rounds,
         mem_safe=mem_safe, use_kernel=use_kernel, interpret=interpret,
         stepping=params.stepping,
-        ac_aligned=_dt_aligned(cfg, params.dt))
+        ac_aligned=_dt_aligned(cfg, params.dt),
+        orphan_retry=params.orphan_retry)
     return jax.device_get(out)
 
 

@@ -55,6 +55,7 @@ class SimResult:
     per_vm_cost: dict[str, float]
     trace: list[str]
     n_terminations: int = 0
+    n_completed: int = 0          # DONE tasks; + unfinished == n_tasks
 
 
 class Simulator:
@@ -128,6 +129,8 @@ class Simulator:
                    and t.vm_uid < 0]
         self._orphans = []
         if pending:
+            for _ in pending:
+                self.count("orphan_retries")
             self._migrate(pending, self.policy.use_burstables,
                           count_failures=False)
 
@@ -461,6 +464,8 @@ class Simulator:
             n_dynamic_ondemand=self._n_dyn_od, counters=dict(self.counters),
             n_terminations=self._n_term,
             unfinished=len(unfinished),
+            n_completed=sum(1 for t in self.cluster.tasks.values()
+                            if t.state == TaskState.DONE),
             per_vm_cost={v.vm.name: v.cost for v in self.cluster.vms.values()
                          if v.cost > 0},
             trace=self.trace)

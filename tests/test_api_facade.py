@@ -23,9 +23,10 @@ MC = MCParams(n_scenarios=4, dt=30.0, seed=1)
 
 #: the pinned public surface — extending it is a conscious API decision
 API_SURFACE = ["ArrivalPolicy", "BACKENDS", "BatchedILSParams",
-               "CloudConfig", "Experiment", "ILSParams", "MCParams",
-               "POLICIES", "Result", "Service", "ServiceResult", "make_job",
-               "make_policy", "policy", "run", "sweep"]
+               "ChaosReport", "CloudConfig", "Experiment", "ILSParams",
+               "MCParams", "POLICIES", "Result", "Service", "ServiceResult",
+               "make_job", "make_policy", "policy", "run", "run_chaos_suite",
+               "sweep"]
 
 #: unified row schema every backend must produce
 ROW_KEYS = {"job", "policy", "process", "backend", "s", "dt", "cost",

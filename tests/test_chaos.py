@@ -1,0 +1,159 @@
+"""Chaos fault-injection harness (DESIGN.md §2.10).
+
+Pins the three layers of the harness:
+
+* ``FaultPlan`` construction-time validation and the deterministic
+  adversary contract (the PRNG key is ignored — every key yields the
+  same event tensor);
+* the *intensity-superset* property — a plan's event requests at a
+  higher intensity dominate those at a lower one slot-by-slot, the
+  structural guarantee behind the suite's monotone-degradation checks;
+* ``run_chaos_suite`` end-to-end on a tiny grid: the recovery
+  invariants hold (work conservation, zero stranded tasks, monotone
+  degradation), the report is deterministic, and the ``repro.api``
+  facade re-exports the entry point.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.chaos import ChaosReport, run_chaos_suite
+from repro.sim.chaos import FAULT_KINDS, FaultPlan, fault_grid
+from repro.sim.market import EventTensorError
+from repro.sim.mc_engine import MCParams
+
+S, N, V, DT, DEADLINE = 2, 40, 12, 30.0, 900.0
+
+
+def _sample(plan, key=0):
+    return plan.sample(jax.random.PRNGKey(key), s=S, n_slots=N, v=V,
+                       dt=DT, deadline_s=DEADLINE)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan validation + determinism
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    dict(kind="meteor"),
+    dict(intensity=-0.1),
+    dict(intensity=1.5),
+    dict(at_frac=0.0),
+    dict(at_frac=1.0),
+])
+def test_fault_plan_validation_raises(bad):
+    with pytest.raises(EventTensorError):
+        FaultPlan(**bad)
+
+
+def test_fault_plan_ignores_prng_key():
+    plan = FaultPlan(kind="storm", intensity=0.5)
+    a, b = _sample(plan, key=0), _sample(plan, key=123)
+    np.testing.assert_array_equal(a.term_k, b.term_k)
+    np.testing.assert_array_equal(a.hib_k, b.hib_k)
+    np.testing.assert_array_equal(a.res_k, b.res_k)
+
+
+def test_fault_plan_uniform_across_scenarios():
+    ev = _sample(FaultPlan(kind="flap", intensity=0.7))
+    for field in (ev.hib_k, ev.res_k, ev.term_k):
+        arr = np.asarray(field)
+        assert (arr == arr[:1]).all()   # every scenario sees the storm
+
+
+def test_zero_intensity_is_event_free():
+    for kind in FAULT_KINDS:
+        ev = _sample(FaultPlan(kind=kind, intensity=0.0))
+        assert int(np.sum(ev.hib_k)) == 0
+        assert int(np.sum(ev.res_k)) == 0
+        assert int(np.sum(ev.term_k)) == 0
+
+
+def test_fault_kinds_author_their_direction():
+    storm = _sample(FaultPlan(kind="storm", intensity=0.5))
+    assert int(np.sum(storm.term_k)) > 0 and int(np.sum(storm.hib_k)) == 0
+    mass = _sample(FaultPlan(kind="deadline_mass", intensity=0.5,
+                             at_frac=0.75))
+    tk = np.asarray(mass.term_k)
+    assert int(np.count_nonzero(tk[0])) == 1   # one correlated shot
+    assert int(tk[0, int((0.75 * DEADLINE) // DT)]) > 0
+    flap = _sample(FaultPlan(kind="flap", intensity=0.5))
+    assert int(np.sum(flap.hib_k)) > 0 and int(np.sum(flap.res_k)) > 0 \
+        and int(np.sum(flap.term_k)) > 0
+
+
+# ---------------------------------------------------------------------------
+# Intensity-superset property
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", FAULT_KINDS)
+def test_intensity_superset(kind):
+    """Event requests at a higher intensity dominate a lower one
+    slot-by-slot — the structural basis of monotone degradation."""
+    lo = _sample(FaultPlan(kind=kind, intensity=0.3))
+    hi = _sample(FaultPlan(kind=kind, intensity=0.9))
+    for a, b in ((lo.hib_k, hi.hib_k), (lo.res_k, hi.res_k),
+                 (lo.term_k, hi.term_k)):
+        assert np.all(np.asarray(a) <= np.asarray(b))
+
+
+def test_n_victims_monotone_and_clamped():
+    plans = [FaultPlan(intensity=i) for i in (0.0, 0.3, 0.6, 1.0)]
+    ks = [p.n_victims(V) for p in plans]
+    assert ks == sorted(ks) and ks[0] == 0 and ks[-1] == V
+
+
+def test_fault_grid_shape_and_names():
+    grid = fault_grid(("storm", "flap"), (0.0, 0.5))
+    assert len(grid) == 4
+    assert {p.name for p in grid} == {"storm@0.00", "storm@0.50",
+                                      "flap@0.00", "flap@0.50"}
+
+
+# ---------------------------------------------------------------------------
+# Suite end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_report():
+    return run_chaos_suite(
+        jobs=("J12",), policies=("burst-hads",),
+        kinds=("storm", "deadline_mass"), intensities=(0.0, 0.8),
+        params=MCParams(n_scenarios=2, dt=30.0, seed=0))
+
+
+def test_suite_invariants_hold(tiny_report):
+    rep = tiny_report
+    assert isinstance(rep, ChaosReport)
+    assert rep.ok, [str(v) for v in rep.violations]
+    assert len(rep.rows) == 4          # 1 job x 1 policy x 2 kinds x 2 i
+    for r in rep.rows:
+        assert r["work_conserved"], r
+        assert r["stranded_tasks"] == 0, r
+    s = rep.summary()
+    assert s["ok"] and s["stranded_total"] == 0
+    assert s["n_cells"] == 4 and not s["cells_failing_conservation"]
+
+
+def test_suite_actually_injects_faults(tiny_report):
+    by = {r["process"]: r for r in tiny_report.rows}
+    assert by["storm@0.80"]["mean_terminations"] > \
+        by["storm@0.00"]["mean_terminations"] == 0.0
+
+
+def test_suite_deterministic(tiny_report):
+    again = run_chaos_suite(
+        jobs=("J12",), policies=("burst-hads",),
+        kinds=("storm", "deadline_mass"), intensities=(0.0, 0.8),
+        params=MCParams(n_scenarios=2, dt=30.0, seed=0))
+    key = ("job", "policy", "process", "mean_terminations",
+           "deadline_met_frac", "stranded_tasks")
+    assert [[r[k] for k in key] for r in tiny_report.rows] == \
+        [[r[k] for k in key] for r in again.rows]
+
+
+def test_api_facade_exports_chaos():
+    assert api.run_chaos_suite is run_chaos_suite
+    assert api.ChaosReport is ChaosReport
+    assert "run_chaos_suite" in api.__all__

@@ -32,6 +32,7 @@ import json
 import os
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -44,8 +45,9 @@ from repro import api
 from repro.core.dynamic import ArrivalPolicy
 from repro.core.ils import ILSParams
 from repro.core.types import CloudConfig, TaskSpec
-from repro.service import (VERDICT_CONGESTION, VERDICT_DEADLINE_MISSED,
-                           VERDICT_SUCCESS, Arrival, Service,
+from repro.service import (PROVENANCE_ARRIVAL, PROVENANCE_REQUEUED,
+                           VERDICT_CONGESTION, VERDICT_DEADLINE_MISSED,
+                           VERDICT_SUCCESS, VM_TERMINATED, Arrival, Service,
                            arrivals_from_csv, arrivals_to_csv,
                            bursty_arrivals, stationary_arrivals)
 from repro.sim.events import SCENARIOS, slice_event_tensor
@@ -395,6 +397,102 @@ def test_past_horizon_arrivals_rejected():
     res = _svc().run([late])
     assert len(res.records) == 1
     assert res.records[0].verdict == VERDICT_CONGESTION
+
+
+# ---------------------------------------------------------------------------
+# Fault recovery: re-admission of stranded work (DESIGN.md §2.10)
+# ---------------------------------------------------------------------------
+def _stranded_pair():
+    """Two admitted tasks; task 0's column is then surgically terminated
+    in scenario 0 — the minimal stranded-work state (engine-produced
+    stranding needs a migration failure, which on-demand fallback makes
+    nearly impossible by design; the unit contract is what's pinned)."""
+    svc = _svc(process="none", seed=0)
+    svc._ensure_cap(1)
+    recs = [svc._admit(Arrival(10.0 * (i + 1),
+                               TaskSpec(tid=i, memory_mb=1000.0,
+                                        base_time=400.0), 4000.0), 300.0)
+            for i in range(2)]
+    assert all(r.verdict == VERDICT_SUCCESS for r in recs)
+    vstate = np.array(svc._state.vstate)
+    vstate[0, recs[0].column] = VM_TERMINATED
+    svc._state = dataclasses.replace(svc._state,
+                                     vstate=jnp.asarray(vstate))
+    return svc, recs
+
+
+def test_requeue_relocates_stranded_task_in_place():
+    svc, recs = _stranded_pair()
+    rem_before = np.asarray(svc._state.rem[:, :2]).copy()
+    svc._requeue_stranded(600.0)
+    req = [r for r in svc._records if r.provenance == PROVENANCE_REQUEUED]
+    assert [(r.tid, r.verdict) for r in req] == [(0, VERDICT_SUCCESS)]
+    new_col = svc._assign[0]
+    assert new_col != recs[0].column
+    assert np.asarray(svc._state.vstate)[0, new_col] != VM_TERMINATED
+    # relocation preserves per-scenario progress: rem untouched
+    np.testing.assert_allclose(np.asarray(svc._state.rem[:, :2]),
+                               rem_before)
+    # the healthy task is untouched
+    assert svc._assign[1] == recs[1].column
+
+
+def test_requeue_noop_without_terminated_columns():
+    svc = _svc(process="none", seed=0)
+    svc._ensure_cap(1)
+    svc._records.append(svc._admit(
+        Arrival(10.0, TaskSpec(tid=0, memory_mb=1000.0, base_time=400.0),
+                4000.0), 300.0))
+    n = len(svc._records)
+    svc._requeue_stranded(600.0)
+    assert len(svc._records) == n
+
+
+def test_requeue_deadline_missed_is_terminal_and_mutates_nothing():
+    svc, recs = _stranded_pair()
+    assign_before = list(svc._assign)
+    rem_before = np.asarray(svc._state.rem).copy()
+    # boundary so late even an empty column overruns the 4000 s deadline
+    svc._requeue_stranded(3900.0)
+    req = [r for r in svc._records if r.provenance == PROVENANCE_REQUEUED]
+    assert [r.verdict for r in req] == [VERDICT_DEADLINE_MISSED]
+    assert req[0].column == -1
+    assert svc._assign == assign_before
+    np.testing.assert_array_equal(np.asarray(svc._state.rem), rem_before)
+    # terminal: a passed deadline is never re-litigated at a later fold
+    svc._requeue_stranded(3950.0)
+    assert len([r for r in svc._records
+                if r.provenance == PROVENANCE_REQUEUED]) == 1
+
+
+def test_service_under_chaos_storm_accounts_every_arrival():
+    """End-to-end with a deterministic adversary: every arrival keeps
+    exactly one ARRIVAL-provenance record, requeues ride on top (never
+    replacing an arrival's verdict), and the run is reproducible."""
+    from repro.sim.chaos import FaultPlan
+    plan = FaultPlan(kind="storm", intensity=1.0, period_s=600.0,
+                     name="storm")
+    stream = list(bursty_arrivals(30, rate_per_s=0.02, burst_factor=6.0,
+                                  rel_deadline_s=3600.0, seed=1))
+
+    def once():
+        return _svc(process=plan, seed=0).run(stream)
+
+    res = once()
+    arr = [r for r in res.records if r.provenance == PROVENANCE_ARRIVAL]
+    assert len(arr) == len(stream)
+    assert sorted(r.tid for r in arr) == sorted(a.task.tid for a in stream)
+    assert res.n_admitted + res.n_rejected == len(stream)
+    assert res.n_requeued == sum(
+        1 for r in res.records if r.provenance == PROVENANCE_REQUEUED
+        and r.verdict == VERDICT_SUCCESS)
+    assert res.summary()["n_requeued"] == res.n_requeued
+    # the adversary really fired — this is not a vacuous pass
+    assert float(np.asarray(res.mc.n_terminations).sum()) > 0
+    key = [(r.tid, r.verdict, r.column, r.provenance)
+           for r in res.records]
+    assert key == [(r.tid, r.verdict, r.column, r.provenance)
+                   for r in once().records]
 
 
 # ---------------------------------------------------------------------------
