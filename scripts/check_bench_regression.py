@@ -40,6 +40,14 @@ checks the two machine-independent signals instead:
 * ``orphan_retry_rounds_mean`` — how hard the retry ledger worked on
   the identical chaos grid: material growth means recovery got slower.
 
+It also gates **compile counts** (DESIGN.md §2.11): the fresh
+``results/compile_counts.json`` written by the preceding
+``check_contracts.py`` step is compared against the *committed*
+``src/repro/analysis/budgets.json`` ratchet (``git show HEAD:`` again,
+so a PR editing its own budgets upward without the note/ROADMAP ritual
+still trips here) — any entry point whose measured engine builds exceed
+the committed budget fails, deterministically, independent of hardware.
+
 ``scen_per_s`` deltas are printed for information only.  Skips
 gracefully (exit 0, with a notice) when no baseline is committed yet,
 the fresh artifact is missing, or no keys overlap — a new bench grid
@@ -58,7 +66,47 @@ import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ARTIFACT = "BENCH_dynamic.json"
+BUDGETS = "src/repro/analysis/budgets.json"
+COUNTS = os.path.join("results", "compile_counts.json")
 KEY = ("job", "policy", "process", "s", "dt", "stepping")
+
+
+def check_compile_counts() -> int:
+    """Gate freshly measured engine-build counts on the *committed*
+    compile budgets (DESIGN.md §2.11).  Returns the number of entry
+    points over budget; skips gracefully (0) when either side is
+    missing — the trace-contract step may not have run."""
+    counts_path = os.path.join(REPO, COUNTS)
+    if not os.path.exists(counts_path):
+        print(f"# compile gate: no fresh {COUNTS} — skipping")
+        return 0
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"HEAD:{BUDGETS}"], cwd=REPO, check=True,
+            capture_output=True, text=True).stdout
+        budgets = json.loads(blob).get("entry_points", {})
+    except (subprocess.CalledProcessError, FileNotFoundError, ValueError):
+        print(f"# compile gate: no committed {BUDGETS} — skipping")
+        return 0
+    with open(counts_path) as f:
+        fresh = json.load(f).get("entry_points", {})
+    over = 0
+    for name in sorted(set(fresh) & set(budgets)):
+        built = fresh[name].get("engine_builds")
+        budget = budgets[name].get("budget")
+        if built is None or budget is None:
+            continue
+        bad = built > budget
+        print(f"# compile {name}: {built} build(s) vs committed budget "
+              f"{budget} {'OVER BUDGET' if bad else 'ok'}")
+        if bad:
+            over += 1
+    if over:
+        print(f"\n# COMPILE REGRESSION: {over} entry point(s) exceed the "
+              f"committed {BUDGETS} ratchet — an unbudgeted retrace "
+              f"landed (see scripts/check_contracts.py --retrace)",
+              file=sys.stderr)
+    return over
 
 
 def _rows_by_key(doc: dict) -> dict:
@@ -74,6 +122,14 @@ def main() -> int:
                          "(default 0.3)")
     args = ap.parse_args()
 
+    # the compile gate runs unconditionally: a bench-artifact skip must
+    # not also silence a compile-budget breach
+    compile_over = check_compile_counts()
+    bench_bad = _bench_gate(args)
+    return 1 if (compile_over or bench_bad) else 0
+
+
+def _bench_gate(args: argparse.Namespace) -> int:
     fresh_path = os.path.join(REPO, ARTIFACT)
     if not os.path.exists(fresh_path):
         print(f"# bench gate: no fresh {ARTIFACT} — skipping")

@@ -1,0 +1,37 @@
+"""Trace-contract static analysis (DESIGN.md §2.11).
+
+The engine's performance story rests on *trace-time* invariants nothing
+used to enforce: the policy lattice's ≤ 12 engine compiles per shape,
+the megabatch shape buckets, the byte-identical-program claims of the
+EventTensor/EngineState contracts, and the no-host-sync discipline of
+the jitted hot loops.  This package turns those from folklore into
+checks that fail CI:
+
+* :mod:`repro.analysis.lint`    — repo-specific AST rules (host sync,
+  host RNG/wall-clock in jitted bodies, deprecated-shim calls, kernel
+  ref-oracle coverage, static-argname hygiene);
+* :mod:`repro.analysis.schema`  — declarative pytree schemas for
+  ``EventTensor`` and ``EngineState`` checked via ``jax.eval_shape``,
+  a while-loop carry-stability checker, and a donation audit;
+* :mod:`repro.analysis.retrace` — the compile/retrace auditor: counts
+  engine builds per public entry point against the committed
+  ``budgets.json`` ratchet and flags unexplained retraces by the
+  differing avals.
+
+``scripts/check_contracts.py`` is the CI driver over all three.
+"""
+from __future__ import annotations
+
+from .lint import Violation, lint_paths, lint_source          # noqa: F401
+from .retrace import (CompileTracker, audit_entry_points,      # noqa: F401
+                      load_budgets, signature_of)
+from .schema import (SchemaError, assert_carry_stable,         # noqa: F401
+                     audit_donation, check_engine_state,
+                     check_event_tensor)
+
+__all__ = [
+    "CompileTracker", "SchemaError", "Violation", "assert_carry_stable",
+    "audit_donation", "audit_entry_points", "check_engine_state",
+    "check_event_tensor", "lint_paths", "lint_source", "load_budgets",
+    "signature_of",
+]

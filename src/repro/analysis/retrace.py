@@ -1,0 +1,238 @@
+"""Compile/retrace auditor for the public entry points (DESIGN.md §2.11).
+
+Two complementary counters:
+
+* **engine builds** — ``_cache_size()`` deltas on the repo's known jit
+  handles (``mc_engine._mc_jit``, ``ils_jax._ils_scan``/``_ils_step``).
+  Precise and attributable: a delta of N means XLA built N new engine
+  programs during the tracked region.
+* **backend compiles** — a ``jax.monitoring`` duration listener on
+  ``/jax/core/compile/backend_compile_duration``.  Global (it also
+  fires for op-by-op dispatch of host-side glue), so it is recorded as
+  an auxiliary total, never budgeted.
+
+Per entry point the auditor records an *aval signature* of each tracked
+call (shape/dtype/weak_type of every array leaf plus the reprs of the
+static arguments).  A retrace is **explained** when its signature is
+new, **unexplained** when an already-seen signature still triggered an
+engine build — the classic causes being weak-type promotion, an
+unstable carry dtype, or a non-hashable static argument churning the
+cache key.  Unexplained retraces name the entry point and the leaves
+whose avals differ from the nearest previous signature.
+
+Budgets live in ``budgets.json`` next to this module and are ratchets:
+measured > budget fails CI; measured persistently < budget should
+lower the budget in the same PR that improved it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Iterable
+
+import jax
+
+__all__ = [
+    "BUDGETS_PATH", "CompileTracker", "EntryPointAudit", "audit_entry_points",
+    "diff_signatures", "engine_cache_sizes", "load_budgets", "signature_of",
+]
+
+BUDGETS_PATH = os.path.join(os.path.dirname(__file__), "budgets.json")
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+# ---------------------------------------------------------------------------
+# monitoring listener (registered once; jax.monitoring has no unregister)
+# ---------------------------------------------------------------------------
+_ACTIVE: list["CompileTracker"] = []
+_LISTENING = False
+
+
+def _on_event(event: str, duration: float, **_kw: Any) -> None:
+    if event == _COMPILE_EVENT:
+        for t in _ACTIVE:
+            t.backend_compiles += 1
+
+
+def _ensure_listener() -> None:
+    global _LISTENING
+    if not _LISTENING:
+        jax.monitoring.register_event_duration_secs_listener(_on_event)
+        _LISTENING = True
+
+
+def engine_cache_sizes() -> dict[str, int]:
+    """Lowering-cache sizes of the repo's known jit handles.  Imports
+    lazily — the analysis package must stay importable without pulling
+    the engine in."""
+    from repro.core import ils_jax
+    from repro.sim import mc_engine
+    sizes: dict[str, int] = {}
+    for donate in (False, True):
+        sizes[f"mc_engine[donate={donate}]"] = \
+            mc_engine._mc_jit(donate)._cache_size()
+        sizes[f"ils_scan[donate={donate}]"] = \
+            ils_jax._ils_scan(donate)._cache_size()
+    sizes["ils_step"] = ils_jax._ils_step._cache_size()
+    return sizes
+
+
+# ---------------------------------------------------------------------------
+# aval signatures
+# ---------------------------------------------------------------------------
+
+def _sig_leaf(x: Any) -> str:
+    try:
+        aval = jax.eval_shape(lambda v: v, x)
+        weak = getattr(aval, "weak_type", False)
+        return f"{aval.dtype}[{','.join(map(str, aval.shape))}]" + \
+            ("~weak" if weak else "")
+    except (TypeError, ValueError):
+        return repr(x)
+
+
+def signature_of(*args: Any, **kwargs: Any) -> tuple[tuple[str, str], ...]:
+    """Hashable aval signature of a call: ``(path, aval-or-repr)`` per
+    leaf, statics included by repr.  Two calls with equal signatures
+    must hit the same jit cache entry — if they don't, the retrace is
+    unexplained."""
+    flat, _ = jax.tree_util.tree_flatten_with_path((args, kwargs))
+    return tuple((jax.tree_util.keystr(path), _sig_leaf(leaf))
+                 for path, leaf in flat)
+
+
+def diff_signatures(old: Iterable[tuple[str, str]],
+                    new: Iterable[tuple[str, str]]) -> list[str]:
+    """Name the leaves whose avals differ between two call signatures."""
+    a, b = dict(old), dict(new)
+    out = []
+    for key in sorted(set(a) | set(b)):
+        if a.get(key) != b.get(key):
+            out.append(f"{key}: {a.get(key, '<absent>')} -> "
+                       f"{b.get(key, '<absent>')}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# tracking
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompileTracker:
+    """Context manager counting engine builds (and backend compiles)
+    over a region, attributing them to one entry-point label.
+
+    >>> with CompileTracker("run_mc_events/lattice") as t:
+    ...     t.record(sig=signature_of(arr, sc, ev, ...))
+    ...     run_mc_events(...)
+    >>> t.engine_builds, t.unexplained
+    """
+
+    label: str
+    backend_compiles: int = 0
+    engine_builds: int = 0
+    signatures: list[tuple[tuple[str, str], ...]] = \
+        dataclasses.field(default_factory=list)
+    unexplained: list[str] = dataclasses.field(default_factory=list)
+    #: extra jit handles (name -> jitted fn) tracked alongside the
+    #: engine's — lets tests audit toy functions with the same machinery
+    extra_handles: dict[str, Any] = dataclasses.field(default_factory=dict)
+    _start: dict[str, int] = dataclasses.field(default_factory=dict)
+    _last_sizes: dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def _sizes(self) -> dict[str, int]:
+        sizes = engine_cache_sizes()
+        for name, fn in self.extra_handles.items():
+            sizes[f"extra:{name}"] = fn._cache_size()
+        return sizes
+
+    def __enter__(self) -> "CompileTracker":
+        _ensure_listener()
+        self._start = self._sizes()
+        self._last_sizes = dict(self._start)
+        _ACTIVE.append(self)
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        _ACTIVE.remove(self)
+        self.engine_builds = self._delta(self._start)
+
+    def _delta(self, base: dict[str, int]) -> int:
+        now = self._sizes()
+        return sum(now[k] - base.get(k, 0) for k in now)
+
+    def checkpoint(self, sig: tuple[tuple[str, str], ...] | None = None
+                   ) -> int:
+        """Engine builds since the previous checkpoint.  With ``sig``,
+        classify: builds on an already-seen signature are unexplained
+        retraces, reported with the differing avals vs the previous
+        signature."""
+        builds = self._delta(self._last_sizes)
+        self._last_sizes = self._sizes()
+        if sig is not None:
+            if builds > 0 and sig in self.signatures:
+                prev = self.signatures[-1]
+                diff = diff_signatures(prev, sig) or \
+                    ["<identical avals — suspect a non-hashable static "
+                     "argument or weak-type promotion inside the trace>"]
+                self.unexplained.append(
+                    f"{self.label}: {builds} engine build(s) on an "
+                    "already-seen call signature; differing leaves vs "
+                    "previous call: " + "; ".join(diff))
+            self.signatures.append(sig)
+        return builds
+
+
+# ---------------------------------------------------------------------------
+# budgets
+# ---------------------------------------------------------------------------
+
+def load_budgets(path: str = BUDGETS_PATH) -> dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+@dataclasses.dataclass
+class EntryPointAudit:
+    name: str
+    engine_builds: int
+    budget: int | None
+    note: str = ""
+    unexplained: list[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.unexplained and (
+            self.budget is None or self.engine_builds <= self.budget)
+
+    def describe(self) -> str:
+        mark = "OK " if self.ok else "FAIL"
+        b = "unbudgeted" if self.budget is None else f"budget {self.budget}"
+        line = f"[{mark}] {self.name}: {self.engine_builds} engine " \
+               f"build(s) ({b})"
+        if self.budget is not None and self.engine_builds < self.budget - 1:
+            line += f"  — ratchet: lower the budget to {self.engine_builds}"
+        for u in self.unexplained:
+            line += f"\n       unexplained retrace: {u}"
+        return line
+
+
+def audit_entry_points(measured: dict[str, "CompileTracker"],
+                       budgets: dict | None = None) -> list[EntryPointAudit]:
+    """Join measured trackers against the committed budget baseline.
+    Entry points in the baseline but not measured are skipped (partial
+    smoke runs); measured-but-unbudgeted entries audit as informational
+    (no budget to exceed, but unexplained retraces still fail)."""
+    budgets = budgets if budgets is not None else load_budgets()
+    entries = budgets.get("entry_points", {})
+    out: list[EntryPointAudit] = []
+    for name, tracker in measured.items():
+        spec = entries.get(name, {})
+        out.append(EntryPointAudit(
+            name=name,
+            engine_builds=tracker.engine_builds,
+            budget=spec.get("budget"),
+            note=spec.get("note", ""),
+            unexplained=list(tracker.unexplained)))
+    return out

@@ -1,0 +1,343 @@
+"""Pytree schemas for the engine-boundary contracts (DESIGN.md §2.11).
+
+The engine's "byte-identical program" claims reduce to three aval-level
+facts that goldens only test after the fact:
+
+* every ``EventTensor`` / ``EngineState`` leaf has the declared shape
+  pattern, dtype, and ``weak_type=False`` — a weak-typed scalar folded
+  into either pytree changes the jit cache key and silently retraces;
+* while-loop carries are aval-stable (carry-in avals == carry-out
+  avals), the root cause of silent retraces and TracerErrors;
+* buffers declared donated are never read after the donating call.
+
+This module checks the first two at runtime via ``jax.eval_shape``
+(no compute, no materialisation) and the third statically via an AST
+audit of the donating call sites.  ``run_mc_events`` runs the pytree
+checks at its boundary when ``REPRO_SCHEMA_CHECKS=1`` is set (the
+``check_contracts`` driver sets it for its probes).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Any, Callable, Mapping
+
+import jax
+
+from .lint import Violation, _add_parents, _dotted, _posix_rel
+
+__all__ = [
+    "ENGINE_STATE_SCHEMA", "EVENT_TENSOR_SCHEMA", "LeafSpec", "SchemaError",
+    "assert_carry_stable", "audit_donation", "check_engine_state",
+    "check_event_tensor", "check_pytree",
+]
+
+
+class SchemaError(ValueError):
+    """A pytree leaf violates its declared engine-boundary schema."""
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """Declared aval for one pytree leaf.
+
+    ``dims`` are symbolic axis names ("S", "V", "B", "N") bound on first
+    use and required to agree across leaves; ``dtype`` is the canonical
+    dtype string; ``optional`` leaves may be ``None`` (trace-time gated
+    features such as the terminate direction)."""
+
+    dims: tuple[str, ...]
+    dtype: str
+    optional: bool = False
+
+
+#: EngineState — the mid-horizon carry contract (DESIGN.md §2.9).
+ENGINE_STATE_SCHEMA: dict[str, LeafSpec] = {
+    "slot":    LeafSpec(("S",), "int32"),
+    "vstate":  LeafSpec(("S", "V"), "int32"),
+    "boot":    LeafSpec(("S", "V"), "float32"),
+    "billed":  LeafSpec(("S", "V"), "float32"),
+    "credits": LeafSpec(("S", "V"), "float32"),
+    "rem":     LeafSpec(("S", "B"), "float32"),
+    "assign":  LeafSpec(("S", "B"), "int32"),
+    "mode":    LeafSpec(("S", "B"), "int32"),
+    "done_at": LeafSpec(("S", "B"), "float32"),
+    "n_hib":   LeafSpec(("S",), "int32"),
+    "n_res":   LeafSpec(("S",), "int32"),
+    "n_term":  LeafSpec(("S",), "int32"),
+    "orph":    LeafSpec(("S", "B"), "bool", optional=True),
+}
+
+#: EventTensor — the pregenerated market-trace contract (DESIGN.md §2.4).
+EVENT_TENSOR_SCHEMA: dict[str, LeafSpec] = {
+    "hib_k":  LeafSpec(("S", "N"), "int32"),
+    "hib_u":  LeafSpec(("S", "N", "V"), "float32"),
+    "res_k":  LeafSpec(("S", "N"), "int32"),
+    "res_u":  LeafSpec(("S", "N", "V"), "float32"),
+    "nxt":    LeafSpec(("S", "N"), "int32", optional=True),
+    "term_k": LeafSpec(("S", "N"), "int32", optional=True),
+    "term_u": LeafSpec(("S", "N", "V"), "float32", optional=True),
+}
+
+
+def _aval_of(x: Any) -> jax.ShapeDtypeStruct:
+    """Shape/dtype/weak_type without compute — works for device arrays,
+    numpy arrays, and ShapeDtypeStructs alike."""
+    if isinstance(x, jax.ShapeDtypeStruct):
+        return x
+    return jax.eval_shape(lambda v: v, x)
+
+
+def check_pytree(obj: Any, schema: Mapping[str, LeafSpec], *,
+                 what: str, bind: dict[str, int] | None = None
+                 ) -> dict[str, int]:
+    """Verify ``obj``'s fields against ``schema``; returns the symbolic
+    dim bindings (pass ``bind`` to pin axes across objects, e.g. the
+    state's V against the tensor's V).  Raises :class:`SchemaError`
+    naming every offending leaf and aval in one shot."""
+    dims: dict[str, int] = dict(bind or {})
+    errors: list[str] = []
+    for name, spec in schema.items():
+        leaf = getattr(obj, name, None)
+        if leaf is None:
+            if not spec.optional:
+                errors.append(f"{name}: required leaf is None/missing")
+            continue
+        aval = _aval_of(leaf)
+        if len(aval.shape) != len(spec.dims):
+            errors.append(f"{name}: rank {len(aval.shape)} != "
+                          f"{len(spec.dims)} ({spec.dims})")
+            continue
+        for sym, got in zip(spec.dims, aval.shape):
+            if sym in dims and dims[sym] != got:
+                errors.append(f"{name}: axis {sym}={got} disagrees with "
+                              f"{sym}={dims[sym]} bound earlier")
+            dims.setdefault(sym, got)
+        if str(aval.dtype) != spec.dtype:
+            errors.append(f"{name}: dtype {aval.dtype} != {spec.dtype}")
+        if getattr(aval, "weak_type", False):
+            errors.append(f"{name}: weak_type=True — weak scalars change "
+                          "the jit cache key and force a retrace")
+    if errors:
+        raise SchemaError(f"{what} schema violation:\n  " +
+                          "\n  ".join(errors))
+    return dims
+
+
+def check_engine_state(state: Any, *, bind: dict[str, int] | None = None
+                       ) -> dict[str, int]:
+    return check_pytree(state, ENGINE_STATE_SCHEMA, what="EngineState",
+                        bind=bind)
+
+
+def check_event_tensor(ev: Any, *, bind: dict[str, int] | None = None
+                       ) -> dict[str, int]:
+    if (getattr(ev, "term_k", None) is None) != \
+            (getattr(ev, "term_u", None) is None):
+        raise SchemaError("EventTensor schema violation:\n  term_k/term_u "
+                          "must be both set or both None")
+    return check_pytree(ev, EVENT_TENSOR_SCHEMA, what="EventTensor",
+                        bind=bind)
+
+
+def _leaf_avals(tree: Any) -> list[tuple[str, jax.ShapeDtypeStruct]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(path), _aval_of(leaf))
+            for path, leaf in flat]
+
+
+def assert_carry_stable(body: Callable[..., Any], carry: Any, *args: Any
+                        ) -> None:
+    """Check that a loop body maps the carry aval-identically:
+    ``avals(body(carry, *args)) == avals(carry)`` including weak_type —
+    the lax.while_loop/scan admission rule whose violation is the root
+    cause of silent retraces.  Abstract only (``jax.eval_shape``)."""
+    out = jax.eval_shape(body, carry, *args)
+    ins, outs = _leaf_avals(carry), _leaf_avals(out)
+    errors: list[str] = []
+    if len(ins) != len(outs):
+        errors.append(f"carry has {len(ins)} leaves in, {len(outs)} out")
+    for (pi, ai), (po, ao) in zip(ins, outs):
+        if pi != po:
+            errors.append(f"leaf {pi} in vs {po} out (structure drift)")
+            continue
+        drift = []
+        if ai.shape != ao.shape:
+            drift.append(f"shape {ai.shape} -> {ao.shape}")
+        if ai.dtype != ao.dtype:
+            drift.append(f"dtype {ai.dtype} -> {ao.dtype}")
+        wi = getattr(ai, "weak_type", False)
+        wo = getattr(ao, "weak_type", False)
+        if wi != wo:
+            drift.append(f"weak_type {wi} -> {wo}")
+        if drift:
+            errors.append(f"carry leaf {pi}: " + ", ".join(drift))
+    if errors:
+        raise SchemaError("unstable while-loop carry:\n  " +
+                          "\n  ".join(errors))
+
+
+# ---------------------------------------------------------------------------
+# donation audit (static)
+# ---------------------------------------------------------------------------
+
+def _donated_indices(call: ast.Call) -> set[int]:
+    """All constant ints appearing inside a donate_argnums value — a
+    conditional like ``(2,) if donate else ()`` audits as {2} (the audit
+    must hold whenever donation is on)."""
+    out: set[int] = set()
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) and isinstance(node.value, int):
+                    out.add(node.value)
+    return out
+
+
+def _stmt_of(node: ast.AST) -> ast.stmt:
+    cur = node
+    while not isinstance(cur, ast.stmt):
+        cur = cur._lint_parent  # type: ignore[attr-defined]
+    return cur
+
+
+def _statements_after(call: ast.AST, fn: ast.AST) -> list[ast.stmt]:
+    """Statements that can execute *after* ``call`` inside ``fn``,
+    branch-aware: the untaken side of an if/elif chain is excluded
+    (mutually exclusive with the call), while loop bodies are included
+    wholesale (an earlier line runs again next iteration)."""
+    out: list[ast.stmt] = []
+    stmt: ast.AST = _stmt_of(call)
+    while stmt is not fn:
+        parent = stmt._lint_parent  # type: ignore[attr-defined]
+        for field in ("body", "orelse", "finalbody"):
+            block = getattr(parent, field, None)
+            if isinstance(block, list) and stmt in block:
+                if isinstance(parent, (ast.For, ast.While)):
+                    out.extend(block)          # next iteration re-runs all
+                else:
+                    out.extend(block[block.index(stmt) + 1:])
+                break
+        stmt = parent
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            break
+    return out
+
+
+def _assign_targets(stmt: ast.stmt) -> set[str]:
+    names: set[str] = set()
+    targets: list[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    for t in targets:
+        for node in ast.walk(t):
+            if isinstance(node, ast.Name):
+                names.add(node.id)
+    return names
+
+
+def audit_donation(src_root: str) -> list[Violation]:
+    """Statically verify that buffers passed in donated positions are
+    never read after the donating call (rule DON01).
+
+    Covers the repo's two idioms: a factory whose body returns
+    ``jax.jit(..., donate_argnums=...)`` called directly
+    (``_mc_jit(d)(args...)``) or through one local alias
+    (``f = _ils_scan(d)`` … ``f(args...)``).  Rebinding by the call's
+    own assignment targets and reads on the untaken side of an if/elif
+    are not escapes."""
+    out: list[Violation] = []
+    pkg = os.path.join(src_root, "repro")
+    for dirpath, _dirs, files in os.walk(pkg):
+        for fname in sorted(files):
+            if fname.endswith(".py"):
+                out += _audit_module(os.path.join(dirpath, fname), src_root)
+    return out
+
+
+def _audit_module(path: str, src_root: str) -> list[Violation]:
+    with open(path) as fh:
+        tree = ast.parse(fh.read())
+    _add_parents(tree)
+    relpath = _posix_rel(path, os.path.dirname(src_root))
+
+    # 1. donating factories: def f(...): return jax.jit(..., donate_*=...)
+    #    and donating aliases: g = jax.jit(..., donate_*=...)
+    factories: dict[str, set[int]] = {}
+    jitted: dict[str, set[int]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _dotted(node.func) in (
+                "jax.jit", "jit"):
+            idx = _donated_indices(node)
+            if not idx:
+                continue
+            stmt = _stmt_of(node)
+            if isinstance(stmt, ast.Return):
+                fn = stmt._lint_parent  # type: ignore[attr-defined]
+                while fn is not None and not isinstance(
+                        fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    fn = fn._lint_parent  # type: ignore[attr-defined]
+                if fn is not None:
+                    factories.setdefault(fn.name, set()).update(idx)
+            elif isinstance(stmt, ast.Assign):
+                for name in _assign_targets(stmt):
+                    jitted.setdefault(name, set()).update(idx)
+
+    if not factories and not jitted:
+        return []
+
+    # 2. local aliases of factory results: f = _mc_jit(...)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call) \
+                and isinstance(node.value.func, ast.Name) \
+                and node.value.func.id in factories:
+            for name in _assign_targets(node):
+                jitted.setdefault(name, set()).update(
+                    factories[node.value.func.id])
+
+    # 3. call sites: jitted-name(...) or factory(...)(...)
+    out: list[Violation] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        donated: set[int] = set()
+        if isinstance(node.func, ast.Name) and node.func.id in jitted:
+            donated = jitted[node.func.id]
+        elif isinstance(node.func, ast.Call) and isinstance(
+                node.func.func, ast.Name) and node.func.func.id in factories:
+            donated = factories[node.func.func.id]
+        if not donated:
+            continue
+        fn = node
+        while fn is not None and not isinstance(
+                fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fn = getattr(fn, "_lint_parent", None)
+        if fn is None:
+            continue
+        stmt = _stmt_of(node)
+        rebound = _assign_targets(stmt)
+        after = _statements_after(node, fn)
+        for i in sorted(donated):
+            if i >= len(node.args):
+                continue
+            arg = node.args[i]
+            if not isinstance(arg, ast.Name) or arg.id in rebound:
+                continue
+            for later in after:
+                for sub in ast.walk(later):
+                    if isinstance(sub, ast.Name) and sub.id == arg.id \
+                            and isinstance(sub.ctx, ast.Load):
+                        out.append(Violation(
+                            "DON01", relpath, sub.lineno,
+                            f"{arg.id!r} is donated (arg {i}) at line "
+                            f"{node.lineno} but read afterwards — a "
+                            "donated buffer is dead after the call"))
+                        break
+                else:
+                    continue
+                break
+    return out

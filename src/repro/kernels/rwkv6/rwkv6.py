@@ -68,7 +68,7 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sout_ref, state_ref,
 
     # state update to end of chunk
     cum_last = cum[-1]                      # [hd]
-    k_scaled = k * (cum_last / cum)         # prod w_{s+1..last}
+    k_scaled = k * (cum_last[None, :] / cum)  # prod w_{s+1..last}
     s_new = s * cum_last[:, None] + jax.lax.dot_general(
         k_scaled, v, (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)

@@ -20,8 +20,8 @@ from .config import ModelConfig
 
 
 def gelu_mlp(p: dict, x: jax.Array) -> jax.Array:
-    h = jax.nn.gelu(x @ p["w_in"] + p["b_in"])
-    return h @ p["w_out"] + p["b_out"]
+    h = jax.nn.gelu(x @ p["w_in"] + p["b_in"][None, None, :])
+    return h @ p["w_out"] + p["b_out"][None, None, :]
 
 
 def swiglu(p: dict, x: jax.Array) -> jax.Array:
@@ -30,8 +30,8 @@ def swiglu(p: dict, x: jax.Array) -> jax.Array:
 
 def rwkv_channel_mix(p: dict, x: jax.Array, x_prev: jax.Array) -> jax.Array:
     """RWKV channel mix with token shift.  x/x_prev: [B, S, d]."""
-    xk = x + (x_prev - x) * p["mu_k"]
-    xr = x + (x_prev - x) * p["mu_r"]
+    xk = x + (x_prev - x) * p["mu_k"][None, None, :]
+    xr = x + (x_prev - x) * p["mu_r"][None, None, :]
     r = jax.nn.sigmoid(xr @ p["w_r"])
     k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
     return r * (k @ p["w_v"])

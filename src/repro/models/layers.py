@@ -12,13 +12,16 @@ def rms_norm(x: jax.Array, gain: jax.Array, eps: float = 1e-6) -> jax.Array:
     dt = x.dtype
     x = x.astype(jnp.float32)
     x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
-    return (x * gain.astype(jnp.float32)).astype(dt)
+    g = gain.astype(jnp.float32)
+    g = g.reshape((1,) * (x.ndim - g.ndim) + g.shape)
+    return (x * g).astype(dt)
 
 
 def rope_angles(positions: jax.Array, d_rot: int, theta: float) -> tuple:
     """-> (sin, cos) of shape [*positions.shape, d_rot // 2]."""
     inv = 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot))
-    ang = positions.astype(jnp.float32)[..., None] * inv
+    ang = positions.astype(jnp.float32)[..., None] \
+        * inv.reshape((1,) * positions.ndim + (-1,))
     return jnp.sin(ang), jnp.cos(ang)
 
 

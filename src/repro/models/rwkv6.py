@@ -29,7 +29,7 @@ def _token_shift(x: jax.Array, x_last: jax.Array | None = None) -> jax.Array:
 def _project(p: dict, x: jax.Array, prev: jax.Array, cfg: ModelConfig):
     """Token-shifted projections -> r, k, v, g, w (decay)."""
     def lerp(mu):
-        return x + (prev - x) * mu
+        return x + (prev - x) * mu[None, None, :]
 
     h, hd = cfg.rwkv_heads, cfg.rwkv_head_size
     b, s, _ = x.shape
@@ -40,7 +40,7 @@ def _project(p: dict, x: jax.Array, prev: jax.Array, cfg: ModelConfig):
     # data-dependent decay (the Finch contribution)
     xw = lerp(p["mu_w"]).astype(jnp.float32)
     dd = jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]
-    w = jnp.exp(-jnp.exp(p["w0"].astype(jnp.float32) + dd))
+    w = jnp.exp(-jnp.exp(p["w0"].astype(jnp.float32)[None, None, :] + dd))
     w = w.reshape(b, s, h, hd)
     return r, k, v, g, w
 
@@ -60,7 +60,7 @@ def wkv_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
     def step(s, inp):
         r_, k_, v_, w_ = inp
         kv = k_[..., :, None] * v_[..., None, :]            # [B,H,hd,hd]
-        y = jnp.einsum("bhk,bhkv->bhv", r_, s + uu[..., None] * kv)
+        y = jnp.einsum("bhk,bhkv->bhv", r_, s + uu[None, :, :, None] * kv)
         s = w_[..., :, None] * s + kv
         return s, y
 

@@ -18,7 +18,7 @@ def _causal_conv(x: jax.Array, w: jax.Array,
     if carry is None:
         carry = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
     xp = jnp.concatenate([carry, x], axis=1)
-    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(k))
     return y, xp[:, -(k - 1):] if k > 1 else carry
 
 
@@ -34,7 +34,7 @@ def ssm_scan(u: jax.Array, delta: jax.Array, a: jax.Array, b: jax.Array,
     dominated the memory roofline term (EXPERIMENTS.md §Perf)."""
     def step(h, inp):
         u_t, d_t, b_t, c_t = inp                 # [B,di],[B,di],[B,N],[B,N]
-        da_t = jnp.exp(d_t[..., None] * a)       # [B,di,N]
+        da_t = jnp.exp(d_t[..., None] * a[None])  # [B,di,N]
         h = da_t * h + (d_t * u_t)[..., None] * b_t[:, None, :]
         y = jnp.einsum("bdn,bn->bd", h, c_t)
         return h, y
@@ -59,12 +59,13 @@ def ssm_block(p: dict, x: jax.Array, cfg: ModelConfig,
     proj = (u.astype(jnp.float32) @ p["x_proj"])             # [B,S,r+2N]
     dt, bmat, cmat = jnp.split(
         proj, [cfg.ssm_dt_rank, cfg.ssm_dt_rank + n], axis=-1)
-    delta = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])  # [B,S,di]
+    delta = jax.nn.softplus(
+        dt @ p["dt_proj"] + p["dt_bias"][None, None, :])     # [B,S,di]
     a = -jnp.exp(p["a_log"].astype(jnp.float32))             # [di,N]
 
     if state is None:
         state = jnp.zeros((b, di, n), jnp.float32)
     y, state = ssm_scan(u.astype(jnp.float32), delta, a, bmat, cmat, state)
-    y = y.astype(x.dtype) + u * p["d_skip"]
+    y = y.astype(x.dtype) + u * p["d_skip"][None, None, :]
     y = y * jax.nn.silu(z)
     return y @ p["out_proj"], state, conv_carry

@@ -351,7 +351,7 @@ def _slot_counts(times: jax.Array, n: int, dt: float,
 # Poisson (Table V) — the legacy-parity process
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnums=(1, 2, 3))
-def _poisson_tensor(key, s, n, v, ph, pr, dt, deadline):
+def _poisson_tensor(key, s: int, n: int, v: int, ph, pr, dt, deadline):
     """Replicates the engine's pre-tensor inline sampler exactly: one
     ``split(key, 5)`` per slot, uniforms drawn in (fire_h, victim, fire_r,
     beneficiary) order — the same bits the old ``lax.while_loop`` drew."""

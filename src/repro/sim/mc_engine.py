@@ -79,6 +79,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import os
 
 import jax
 import jax.numpy as jnp
@@ -1443,6 +1444,15 @@ def run_mc_events(job: Job, plan: PrimaryPlan, cfg: CloudConfig,
                 raise ValueError(
                     "stepping='slot' walks all scenarios in lockstep — "
                     f"re-entry needs a uniform slot clock, got {slots}")
+    if os.environ.get("REPRO_SCHEMA_CHECKS"):
+        # aval-level boundary contract (DESIGN.md §2.11) — shape/dtype/
+        # weak-type schemas beyond validate()'s shape checks; no compute.
+        from repro.analysis.schema import (check_engine_state,
+                                           check_event_tensor)
+        dims = check_event_tensor(ev)
+        if state is not None:
+            check_engine_state(
+                state, bind={"S": dims["S"], "V": dims["V"]})
     want_state = bool(stop_s is not None) if return_state is None \
         else return_state
     on_cpu = jax.default_backend() == "cpu"

@@ -1,0 +1,371 @@
+"""Trace-contract analyzer: lint rules, schema checks, retrace auditor,
+and the budget-baseline round trip (DESIGN.md §2.11)."""
+import dataclasses
+import json
+import os
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.lint import lint_paths, lint_source
+from repro.analysis.retrace import (BUDGETS_PATH, CompileTracker,
+                                    audit_entry_points, diff_signatures,
+                                    load_budgets, signature_of)
+from repro.analysis.schema import (SchemaError, _audit_module,
+                                   assert_carry_stable, check_engine_state,
+                                   check_event_tensor)
+from repro.sim.market import EventTensor
+from repro.sim.mc_engine import EngineState
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _rules(violations):
+    return sorted({v.rule for v in violations})
+
+
+# ---------------------------------------------------------------------------
+# lint: each rule must flag its fixture and pass its clean twin
+# ---------------------------------------------------------------------------
+def test_hs01_flags_host_sync_in_jitted_hot_path():
+    src = textwrap.dedent("""
+        import jax, numpy as np
+        @jax.jit
+        def f(x):
+            y = float(x.sum())
+            z = np.asarray(x)
+            return x.item() + y + z.tolist()[0]
+    """)
+    vs = lint_source(src, rel="sim/fixture.py")
+    assert _rules(vs) == ["HS01"] and len(vs) == 4
+
+
+def test_hs01_silent_outside_hot_paths_and_jit_scopes():
+    src = textwrap.dedent("""
+        import jax
+        @jax.jit
+        def f(x):
+            return x * 2
+        def host(x):
+            return float(x.sum())       # host code: fine
+    """)
+    assert lint_source(src, rel="sim/fixture.py") == []
+    hot = textwrap.dedent("""
+        import jax
+        @jax.jit
+        def f(x):
+            return float(x)
+    """)
+    # the same jitted sync outside the hot-path set is not HS01's business
+    assert lint_source(hot, rel="report.py") == []
+    assert _rules(lint_source(hot, rel="kernels/fixture.py")) == ["HS01"]
+
+
+def test_hs01_sees_through_lax_callables_and_helpers():
+    via_lax = textwrap.dedent("""
+        import jax
+        def outer(x):
+            def body(c):
+                return c + x.item()
+            return jax.lax.while_loop(lambda c: c < 3, body, x)
+    """)
+    assert _rules(lint_source(via_lax, rel="sim/f.py")) == ["HS01"]
+    via_helper = textwrap.dedent("""
+        import jax, numpy as np
+        def helper(x):
+            return np.asarray(x)        # called from the trace below
+        @jax.jit
+        def f(x):
+            return helper(x)
+    """)
+    assert _rules(lint_source(via_helper, rel="sim/f.py")) == ["HS01"]
+
+
+def test_rng01_flags_wall_clock_and_host_rng_in_any_jitted_body():
+    src = textwrap.dedent("""
+        import jax, time, numpy as np, random
+        @jax.jit
+        def g(x):
+            return x + time.time() + np.random.uniform() + random.random()
+    """)
+    vs = lint_source(src, rel="api.py")      # not a hot path: still flagged
+    assert _rules(vs) == ["RNG01"] and len(vs) == 3
+    clean = textwrap.dedent("""
+        import jax
+        @jax.jit
+        def g(x, key):
+            return x + jax.random.uniform(key)
+    """)
+    assert lint_source(clean, rel="api.py") == []
+
+
+def test_dep01_flags_shim_calls_outside_compat():
+    src = "def caller():\n    return simulate_mc(1, 2)\n"
+    vs = lint_source(src, rel="report.py", shims={"simulate_mc"})
+    assert _rules(vs) == ["DEP01"]
+    # compat.py itself and the shim's own body are exempt
+    assert lint_source(src, rel="compat.py", shims={"simulate_mc"}) == []
+    inside = textwrap.dedent("""
+        def simulate_mc(a, b):
+            warn_deprecated("simulate_mc", "run_mc")
+            return simulate_mc_impl(a, b)
+    """)
+    assert lint_source(inside, rel="report.py", shims={"simulate_mc"}) == []
+
+
+def test_sta01_flags_unannotated_statics():
+    src = textwrap.dedent("""
+        import jax, functools
+        @functools.partial(jax.jit, static_argnames=("k",))
+        def f(x, k):
+            return x * k
+        def h(x, s, flag: bool):
+            return x
+        hj = jax.jit(h, static_argnums=(1, 2))
+    """)
+    vs = lint_source(src, rel="sim/f.py")
+    assert _rules(vs) == ["STA01"] and len(vs) == 2   # k and s; flag is ok
+    clean = textwrap.dedent("""
+        import jax, functools
+        @functools.partial(jax.jit, static_argnames=("k", "mode", "pol"))
+        def f(x, k: int, mode: str, pol: MyPolicy):
+            return x * k
+    """)
+    assert lint_source(clean, rel="sim/f.py",
+                       frozen_classes={"MyPolicy"}) == []
+
+
+def test_krn01_requires_ref_oracle_per_kernel_entry_point(tmp_path):
+    from repro.analysis.lint import _check_kernel_refs
+    pkg = tmp_path / "repro" / "kernels" / "toyk"
+    pkg.mkdir(parents=True)
+    (pkg / "ops.py").write_text("def toy(x):\n    return x\n")
+    vs = list(_check_kernel_refs(str(tmp_path)))
+    assert [v.rule for v in vs] == ["KRN01"] and "no ref.py" in vs[0].message
+    (pkg / "ref.py").write_text("def other(x):\n    return x\n")
+    vs = list(_check_kernel_refs(str(tmp_path)))
+    assert [v.rule for v in vs] == ["KRN01"] and "toy_ref" in vs[0].message
+    # an alias assignment satisfies the oracle contract
+    (pkg / "ref.py").write_text(
+        "def other(x):\n    return x\ntoy_ref = other\n")
+    assert list(_check_kernel_refs(str(tmp_path))) == []
+
+
+def test_committed_tree_is_lint_clean():
+    assert lint_paths(SRC) == []
+
+
+# ---------------------------------------------------------------------------
+# schema: EngineState / EventTensor / carry stability / donation audit
+# ---------------------------------------------------------------------------
+S, V, B, N = 4, 3, 8, 16
+
+
+def _state(**over):
+    base = dict(
+        slot=jnp.zeros(S, jnp.int32), vstate=jnp.zeros((S, V), jnp.int32),
+        boot=jnp.zeros((S, V), jnp.float32),
+        billed=jnp.zeros((S, V), jnp.float32),
+        credits=jnp.zeros((S, V), jnp.float32),
+        rem=jnp.zeros((S, B), jnp.float32),
+        assign=jnp.zeros((S, B), jnp.int32),
+        mode=jnp.zeros((S, B), jnp.int32),
+        done_at=jnp.zeros((S, B), jnp.float32),
+        n_hib=jnp.zeros(S, jnp.int32), n_res=jnp.zeros(S, jnp.int32),
+        n_term=jnp.zeros(S, jnp.int32))
+    base.update(over)
+    return EngineState(**base)
+
+
+def test_schema_accepts_conforming_state_and_binds_dims():
+    assert check_engine_state(_state()) == {"S": S, "V": V, "B": B}
+    orph = _state(orph=jnp.zeros((S, B), bool))
+    assert check_engine_state(orph)["B"] == B
+
+
+def test_schema_rejects_wrong_dtype_rank_and_weak_type():
+    with pytest.raises(SchemaError, match="rem: dtype int32"):
+        check_engine_state(_state(rem=jnp.zeros((S, B), jnp.int32)))
+    with pytest.raises(SchemaError, match="boot: rank 0"):
+        check_engine_state(_state(boot=jnp.float32(0.0) + 1.0))
+    weak = jnp.zeros((S, V), jnp.float32) * 1.0
+    weak = jax.ShapeDtypeStruct((S, V), jnp.float32, weak_type=True)
+    with pytest.raises(SchemaError, match="weak_type"):
+        check_engine_state(_state(billed=weak))
+    with pytest.raises(SchemaError, match="axis .*disagrees|axis"):
+        check_engine_state(_state(), bind={"V": V + 1})
+
+
+def test_schema_event_tensor_and_cross_binding():
+    ev = EventTensor(jnp.zeros((S, N), jnp.int32),
+                     jnp.zeros((S, N, V), jnp.float32),
+                     jnp.zeros((S, N), jnp.int32),
+                     jnp.zeros((S, N, V), jnp.float32))
+    assert check_event_tensor(ev) == {"S": S, "N": N, "V": V}
+    with pytest.raises(SchemaError, match="disagrees"):
+        check_event_tensor(ev, bind={"V": V + 2})
+    with pytest.raises(SchemaError, match="both set or both None"):
+        check_event_tensor(dataclasses.replace(
+            ev, term_k=jnp.zeros((S, N), jnp.int32)))
+
+
+def test_boundary_gate_rejects_schema_violations(monkeypatch):
+    """run_mc_events refuses a dtype-corrupted state when the env gate
+    is on (the check_contracts probes run with it on)."""
+    from repro.core.dynamic import BURST_HADS, PrimaryPlan
+    from repro.core.types import CloudConfig, Job, Solution, TaskSpec
+    from repro.sim.events import SCENARIOS
+    from repro.sim.market import PoissonProcess
+    from repro.sim.mc_engine import (MCParams, n_slots_for,
+                                     plan_column_uids, run_mc_events)
+    cfg = CloudConfig(max_per_type_market=1)
+    pool = cfg.instance_pool()
+    tasks = tuple(TaskSpec(tid=i, memory_mb=100.0, base_time=300.0)
+                  for i in range(3))
+    job = Job(name="T", tasks=tasks, deadline_s=2400.0)
+    sol = Solution(alloc=np.zeros(3, np.int32), modes=np.zeros(3, np.int8),
+                   pool=pool, selected_uids={0})
+    plan = PrimaryPlan(solution=sol, dspot=5000.0, policy=BURST_HADS)
+    params = MCParams(n_scenarios=2, dt=30.0, seed=7)
+    ev = PoissonProcess.from_scenario(SCENARIOS["sc5"]).sample(
+        jax.random.PRNGKey(7), s=2,
+        n_slots=n_slots_for(job.deadline_s, params),
+        v=len(plan_column_uids(plan)), dt=30.0, deadline_s=job.deadline_s)
+    monkeypatch.setenv("REPRO_SCHEMA_CHECKS", "1")
+    r = run_mc_events(job, plan, cfg, ev, params, stop_s=900.0,
+                      return_state=True)
+    bad = dataclasses.replace(
+        r.state, rem=jnp.asarray(r.state.rem, jnp.int32))
+    with pytest.raises(SchemaError, match="rem: dtype int32"):
+        run_mc_events(job, plan, cfg, ev, params, state=bad)
+
+
+def test_carry_stability_catches_aval_drift():
+    good = lambda c: (c[0] + 1, c[1] * 2.0)
+    assert_carry_stable(good, (jnp.int32(0), jnp.ones(3, jnp.float32)))
+    drift = lambda c: (c[0] + 1.0, c[1] * 2.0)      # int32 -> weak f32
+    with pytest.raises(SchemaError, match="dtype int32 -> float32"):
+        assert_carry_stable(drift, (jnp.int32(0),
+                                    jnp.ones(3, jnp.float32)))
+
+
+def test_donation_audit_flags_read_after_donate(tmp_path):
+    bad = textwrap.dedent("""
+        import jax
+
+        def _factory(donate):
+            return jax.jit(_impl, donate_argnums=(0,) if donate else ())
+
+        def caller(x, y):
+            out = _factory(True)(x, y)
+            return out + x.sum()        # x was donated
+    """)
+    pkg = tmp_path / "src"
+    (pkg / "repro").mkdir(parents=True)
+    p = pkg / "repro" / "mod.py"
+    p.write_text(bad)
+    vs = _audit_module(str(p), str(pkg))
+    assert [v.rule for v in vs] == ["DON01"] and "'x'" in vs[0].message
+
+    branch_ok = textwrap.dedent("""
+        import jax
+
+        def _factory(donate):
+            return jax.jit(_impl, donate_argnums=(0, 1))
+
+        def caller(alloc, fit0, mode):
+            if mode == "scan":
+                f = _factory(True)
+                alloc, best, hist = f(alloc, fit0)   # rebinds alloc
+            elif mode == "step":
+                best = fit0 * 2                       # sibling branch: fine
+            return alloc, best
+    """)
+    p.write_text(branch_ok)
+    assert _audit_module(str(p), str(pkg)) == []
+
+
+def test_committed_tree_passes_donation_audit():
+    from repro.analysis.schema import audit_donation
+    assert audit_donation(SRC) == []
+
+
+# ---------------------------------------------------------------------------
+# retrace auditor: a deliberately-retracing function must be caught
+# ---------------------------------------------------------------------------
+def test_auditor_counts_builds_and_flags_unexplained_retrace():
+    calls = jax.jit(lambda x: x * 2)
+    f32 = jnp.ones(4, jnp.float32)
+    f64 = np.ones(4)                   # different aval -> real retrace
+    sig = signature_of(f32)
+    with CompileTracker("toy", extra_handles={"toy": calls}) as t:
+        calls(f32)
+        assert t.checkpoint(sig=sig) == 1          # cold build, explained
+        calls(f32)
+        assert t.checkpoint(sig=sig) == 0          # warm hit
+        calls(f64)
+        # a build on an already-claimed signature = unexplained retrace
+        assert t.checkpoint(sig=sig) == 1
+    assert t.engine_builds == 2
+    assert len(t.unexplained) == 1 and "toy" in t.unexplained[0]
+
+
+def test_signature_diff_names_weak_type_flips():
+    a = signature_of(jnp.float32(2.0))             # strong f32 scalar
+    b = signature_of(2.0)                          # weak python float
+    d = diff_signatures(a, b)
+    assert len(d) == 1 and "~weak" in d[0]
+
+
+# ---------------------------------------------------------------------------
+# budget baseline round trip
+# ---------------------------------------------------------------------------
+def test_budget_baseline_is_committed_and_covers_entry_points():
+    budgets = load_budgets()
+    entries = budgets["entry_points"]
+    for name in ("run_mc_events/lattice", "run_mc_events/repeat",
+                 "run_batched_ils", "evaluate_grid", "service_replan"):
+        assert name in entries and entries[name]["budget"] >= 0, name
+    assert entries["run_mc_events/lattice"]["budget"] <= 12
+    assert budgets["constants"]["lattice_max_views_per_shape"] == 12
+    assert budgets["constants"]["megabatch_buckets"] == [16, 8, 32]
+    # the known service-granule entry carries its ratchet note
+    assert "ROADMAP 1(a)" in entries["service_replan"]["note"]
+
+
+def test_budget_round_trip_over_and_under(tmp_path):
+    budgets = {"entry_points": {"ep": {"budget": 2, "note": "n"}}}
+    p = tmp_path / "budgets.json"
+    p.write_text(json.dumps(budgets))
+    loaded = load_budgets(str(p))
+    assert loaded == budgets
+
+    under = CompileTracker("ep")
+    under.engine_builds = 1
+    over = CompileTracker("ep2")
+    over.engine_builds = 5
+    loaded["entry_points"]["ep2"] = {"budget": 2}
+    audits = audit_entry_points({"ep": under, "ep2": over}, loaded)
+    by = {a.name: a for a in audits}
+    assert by["ep"].ok and not by["ep2"].ok
+    assert "budget 2" in by["ep2"].describe()
+    # unexplained retraces fail the audit even inside budget
+    under.unexplained = ["weak promotion"]
+    assert not audit_entry_points({"ep": under}, loaded)[0].ok
+
+
+def test_lattice_engine_views_stay_within_budget():
+    from repro.core.dynamic import POLICIES
+    views = {p.engine_view() for p in POLICIES.values()}
+    assert len(views) <= load_budgets()["constants"][
+        "lattice_max_views_per_shape"]
+
+
+def test_tier1_runs_with_rank_promotion_raise():
+    assert jax.numpy.ones(3).dtype == jnp.float32   # sanity
+    assert jax.config.jax_numpy_rank_promotion == "raise"
+    with pytest.raises(ValueError, match="rank_promotion"):
+        jnp.ones((3,)) + jnp.ones((2, 3))
